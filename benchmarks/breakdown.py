@@ -1,0 +1,78 @@
+"""§III-B analog: per-stage runtime breakdown of the GrB-pGrass
+pipeline — p=2 eigenvectors (LOBPCG SpMM-bound), Grassmann continuation
+(Hessian-apply bound = the paper's GraphBLAS component), kmeans.
+
+The paper reports that only the GraphBLAS components scale; this
+breakdown shows where the time goes so Fig-1's scaling projection can
+be applied per component."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lobpcg, kmeans as km, metrics
+from repro.core.psc import PSCConfig, _minimize_at_p
+from repro.graphs import delaunay_graph
+
+K = 4
+
+
+def run(r=11):
+    W, _ = delaunay_graph(r, seed=0)
+    cfg = PSCConfig(k=K, p_target=1.3, newton_iters=15, tcg_iters=10,
+                    kmeans_restarts=4, seed=0)
+
+    t0 = time.time()
+    _, U = lobpcg.smallest_eigvecs(W, K, seed=0)
+    U = jnp.linalg.qr(U)[0]
+    jax.block_until_ready(U)
+    t_eig = time.time() - t0
+
+    t0 = time.time()
+    p, n_hvp = 2.0, 0
+    while True:
+        p = max(cfg.p_target, p * cfg.p_factor)
+        res = _minimize_at_p(W, U, p, cfg)
+        U = res.U
+        n_hvp += int(res.n_hvp)
+        if p <= cfg.p_target:
+            break
+    jax.block_until_ready(U)
+    t_cont = time.time() - t0
+
+    t0 = time.time()
+    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
+    labels, _ = km.kmeans(jax.random.PRNGKey(0), Xn, K,
+                          restarts=cfg.kmeans_restarts)
+    jax.block_until_ready(labels)
+    t_km = time.time() - t0
+
+    total = t_eig + t_cont + t_km
+    return {"r": r, "total_s": total, "t_eig_s": t_eig, "t_cont_s": t_cont,
+            "t_kmeans_s": t_km, "n_hvp": n_hvp,
+            "grb_pct": 100 * (t_eig + t_cont) / total,
+            "rcut": float(metrics.rcut(W, labels, K))}
+
+
+def main(csv=True):
+    row = run()
+    lines = [
+        f"breakdown_del{row['r']}_eig,{row['t_eig_s']*1e6:.0f},"
+        f"share={100*row['t_eig_s']/row['total_s']:.0f}%",
+        f"breakdown_del{row['r']}_continuation,{row['t_cont_s']*1e6:.0f},"
+        f"share={100*row['t_cont_s']/row['total_s']:.0f}%_hvps={row['n_hvp']}",
+        f"breakdown_del{row['r']}_kmeans,{row['t_kmeans_s']*1e6:.0f},"
+        f"share={100*row['t_kmeans_s']/row['total_s']:.0f}%",
+        f"breakdown_del{row['r']}_total,{row['total_s']*1e6:.0f},"
+        f"grb_components={row['grb_pct']:.0f}%",
+    ]
+    if csv:
+        for line in lines:
+            print(line)
+    return row
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""Generates the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json.  §Perf (the hillclimb log) is maintained by
+hand in EXPERIMENTS.md between the AUTOGEN markers."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+from repro.launch.hlo_analysis import PEAK_FLOPS_BF16
+
+V5E_HBM_GB = 16.0
+
+
+def _advice(arch, shape, roof, bneck):
+    if bneck == "collective":
+        if "moe" in arch or "deepseek" in arch or "mixtral" in arch \
+                or "jamba" in arch:
+            return ("force bf16 activation/grad collectives + a2a expert "
+                    "dispatch instead of replicated-x EP psum")
+        return "cast-before-gather (bf16 FSDP all-gathers) + bf16 grad RS"
+    if bneck == "memory":
+        return ("shard attention/logits work over the idle model axis; "
+                "bf16 intermediates in attention + chunked xent")
+    return "increase per-chip batch or shrink the mesh (compute-saturated)"
+
+
+def cell_rows(mesh="single"):
+    rows = []
+    for f in sorted(glob.glob(f"experiments/dryrun/*__{mesh}.json")):
+        r = json.loads(Path(f).read_text())
+        rows.append(r)
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    return rows
+
+
+def dryrun_section(mesh="single"):
+    out = [f"### Dry-run grid — {mesh} mesh "
+           f"({'16x16=256' if mesh == 'single' else '2x16x16=512'} chips)",
+           "",
+           "| arch | shape | status | compile s | GB/device | fits v5e? | collective ops (AG/AR/RS/A2A/CP) |",
+           "|---|---|---|---|---|---|---|"]
+    for r in cell_rows(mesh):
+        if r["status"] != "ok":
+            tag = "SKIP" if str(r["status"]).startswith("skip") else "FAIL"
+            reason = str(r["status"]).split(":", 1)[-1].strip()[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {tag}: {reason} | — | — | — | — |")
+            continue
+        gb = r.get("bytes_per_device", 0) / 1e9
+        cc = r["collectives"]["op_counts"]
+        ops = "/".join(str(cc.get(k, 0)) for k in
+                       ("all-gather", "all-reduce", "reduce-scatter",
+                        "all-to-all", "collective-permute"))
+        fits = "yes" if gb <= V5E_HBM_GB else f"NO ({gb:.0f} GB)"
+        out.append(f"| {r['arch']} | {r['shape']} | ok | "
+                   f"{r.get('compile_s', 0):.1f} | {gb:.1f} | {fits} | {ops} |")
+    return "\n".join(out)
+
+
+def roofline_section(mesh="single"):
+    out = ["### Roofline terms — single-pod (256 chips), per step",
+           "",
+           "| arch | shape | t_compute s | t_memory s | t_collective s | bottleneck | roofline frac | useful FLOPs ratio | next move |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for r in cell_rows(mesh):
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        t_dom = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        t_ideal = ro["model_flops"] / (ro["n_chips"] * PEAK_FLOPS_BF16)
+        frac = t_ideal / t_dom if t_dom else float("nan")
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {ro['t_compute_s']:.4f} | "
+            f"{ro['t_memory_s']:.4f} | {ro['t_collective_s']:.4f} | "
+            f"{ro['bottleneck']} | {frac:.3f} | "
+            f"{ro['useful_flops_ratio']:.2f} | "
+            f"{_advice(r['arch'], r['shape'], ro, ro['bottleneck'])} |")
+    return "\n".join(out)
+
+
+AUTOGEN_BEGIN = "<!-- AUTOGEN:BEGIN (benchmarks/experiments_md.py) -->"
+AUTOGEN_END = "<!-- AUTOGEN:END -->"
+
+
+def main():
+    body = "\n\n".join([
+        AUTOGEN_BEGIN,
+        dryrun_section("single"),
+        dryrun_section("multi"),
+        roofline_section("single"),
+        AUTOGEN_END,
+    ])
+    path = Path("EXPERIMENTS.md")
+    if path.exists():
+        text = path.read_text()
+        if AUTOGEN_BEGIN in text and AUTOGEN_END in text:
+            pre = text.split(AUTOGEN_BEGIN)[0]
+            post = text.split(AUTOGEN_END)[1]
+            path.write_text(pre + body + post)
+            print("EXPERIMENTS.md autogen sections refreshed")
+            return
+        print("EXPERIMENTS.md exists without markers; printing to stdout")
+        print(body)
+        return
+    path.write_text(body + "\n")
+    print("EXPERIMENTS.md written (markers only)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Fig. 1 analog: scaling of the GraphBLAS components.
+
+The paper measures strong scaling over CPU threads (1..32 / 1..88).
+This container has one core, so we report:
+  (a) measured single-core wall time of each GraphBLAS component
+      (SpMM, p-Laplacian apply, Hessian apply, kmeans assign) across
+      graph sizes r — the weak-scaling profile of the op costs, and
+  (b) the projected strong scaling on the TPU mesh from the dry-run
+      roofline: t(chips) = max(compute/chips, memory/chips, collective)
+      for the distributed SpMM schedule (row-block + all-gather),
+      chips in {1..256} — labeled as projection, not measurement.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import delaunay_graph
+from repro.grblas import mxm, plap_edge_semiring
+from repro.core import plap
+from repro.core.kmeans import assign as km_assign
+
+K = 4
+
+
+def _time(f, *args, reps=5):
+    f(*args)  # compile/warm
+    t0 = time.time()
+    for _ in range(reps):
+        r = f(*args)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / reps
+
+
+def run(rs=(10, 12, 14)):
+    rows = []
+    for r in rs:
+        W, _ = delaunay_graph(r, seed=0)
+        n = W.n_rows
+        rng = np.random.default_rng(0)
+        U = jnp.asarray(rng.standard_normal((n, K)), jnp.float32)
+        eta = jnp.asarray(rng.standard_normal((n, K)), jnp.float32)
+        C = jnp.asarray(rng.standard_normal((K, K)), jnp.float32)
+
+        spmm = jax.jit(lambda u: mxm(W, u))
+        plap_f = jax.jit(lambda u: mxm(W, u, plap_edge_semiring(1.4, 1e-8)))
+        hvp = jax.jit(lambda u, e: plap.hess_eta_matrix_free(W, u, e, 1.4))
+        kma = jax.jit(lambda u, c: km_assign(u, c))
+
+        rows.append({
+            "r": r, "n": n, "nnz": W.nnz,
+            "t_spmm_us": _time(spmm, U) * 1e6,
+            "t_plap_us": _time(plap_f, U) * 1e6,
+            "t_hvp_us": _time(hvp, U, eta) * 1e6,
+            "t_kmeans_us": _time(kma, U, C) * 1e6,
+        })
+    return rows
+
+
+def projection(nnz, k=K, chips_list=(1, 2, 4, 8, 16, 32, 64, 128, 256)):
+    """Roofline projection of distributed SpMM strong scaling on v5e.
+
+    Two schedules:
+      naive       — row blocks + FULL multivector all-gather (vector
+                    bytes rival matrix bytes => does NOT strong-scale;
+                    the honest transfer of the paper's 1-D scheme).
+      partitioned — rows placed by min-cut clustering (the paper's OWN
+                    algorithm, repro.graphs/dist integration): only the
+                    ~O(sqrt(n c)) boundary columns are exchanged.
+    """
+    from repro.launch.hlo_analysis import PEAK_FLOPS_BF16, HBM_BW, ICI_BW
+    n = nnz // 6
+    out = []
+    for c in chips_list:
+        t_comp = 2.0 * nnz * k / c / PEAK_FLOPS_BF16
+        t_mem = (nnz * (4 + 4) + nnz * k * 4) / c / HBM_BW
+        t_naive = 0.0 if c == 1 else (n * k * 4) * (c - 1) / c / ICI_BW
+        halo = 0.0 if c == 1 else 4.0 * (n / c) ** 0.5 * k * 4 / ICI_BW
+        out.append((c, max(t_comp, t_mem, t_naive),
+                    max(t_comp, t_mem, halo)))
+    return out
+
+
+def main(csv=True):
+    rows = run()
+    lines = []
+    for row in rows:
+        for op in ("spmm", "plap", "hvp", "kmeans"):
+            lines.append(f"fig1_{op}_del{row['r']},"
+                         f"{row[f't_{op}_us']:.0f},n={row['n']}")
+    proj = projection(6 * 2 ** 20)
+    t1 = proj[0][1]
+    for c, t_naive, t_part in proj:
+        lines.append(f"fig1_proj_spmm_del20_c{c},{t_part*1e6:.2f},"
+                     f"naive={t1/t_naive:.1f}x_partitioned={t1/t_part:.1f}x")
+    if csv:
+        for line in lines:
+            print(line)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,63 @@
+"""Kernel microbenchmarks: jnp/XLA-CPU wall time of each kernel's ref
+path (us/call) + the BSR fill ratio the TPU kernel would pay.
+(Pallas interpret-mode timing is not meaningful; TPU wall time comes
+from the roofline analysis.)"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.graphs import delaunay_graph
+from repro.kernels.bsr_spmm import bsr_spmm
+from repro.kernels.plap_edge import plap_apply
+from repro.kernels.kmeans_assign import kmeans_assign
+from repro.kernels.flash_attention import flash_attention
+
+
+def _time(f, *a, reps=5):
+    r = f(*a)
+    jax.block_until_ready(r)
+    t0 = time.time()
+    for _ in range(reps):
+        r = f(*a)
+    jax.block_until_ready(r)
+    return (time.time() - t0) / reps * 1e6
+
+
+def main(csv=True):
+    lines = []
+    W, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=128)
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((W.n_rows, 4)), jnp.float32)
+
+    lines.append(f"kernel_bsr_spmm_del12,"
+                 f"{_time(lambda x: bsr_spmm(W, x, use_pallas=False), X):.0f},"
+                 f"fill_ratio={W.fill_ratio:.1f}")
+    # BSR block-size sweep (EXPERIMENTS.md §Perf-kernels): fill ratio is
+    # the HBM-roofline cost multiplier of the MXU-native layout
+    for bs in (8, 16, 32, 64):
+        Wb, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=bs)
+        lines.append(f"kernel_bsr_fill_bs{bs},0,fill_ratio={Wb.fill_ratio:.1f}")
+    lines.append(f"kernel_plap_edge_del12,"
+                 f"{_time(lambda x: plap_apply(W, x, 1.4, use_pallas=False), X):.0f},"
+                 f"nnz={W.nnz}")
+    C = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
+    lines.append(f"kernel_kmeans_assign_n{W.n_rows},"
+                 f"{_time(lambda: kmeans_assign(X, C, use_pallas=False)):.0f},"
+                 f"kc=16")
+    q = jnp.asarray(rng.standard_normal((1, 8, 1024, 64)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 2, 1024, 64)), jnp.float32)
+    lines.append(f"kernel_flash_gqa_s1024,"
+                 f"{_time(lambda: flash_attention(q, k, k, use_pallas=False)):.0f},"
+                 f"hq=8_hkv=2")
+    if csv:
+        for line in lines:
+            print(line)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Reads experiments/dryrun/*.json and prints the §Roofline table
+(one row per arch x shape x mesh): three terms, bottleneck, MFU-at-
+bottleneck, useful-flops ratio, bytes/device."""
+from __future__ import annotations
+
+import glob
+import json
+from pathlib import Path
+
+
+def load(out_dir="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(f"{out_dir}/*.json")):
+        r = json.loads(Path(f).read_text())
+        rows.append(r)
+    return rows
+
+
+def fraction_of_roofline(roof):
+    """model_flops-time / dominant-term time: how close the step is to
+    the ideal 'useful flops at peak' bound."""
+    t_ideal = roof["model_flops"] / (roof["n_chips"] * 197e12)
+    t_dom = max(roof["t_compute_s"], roof["t_memory_s"],
+                roof["t_collective_s"])
+    return t_ideal / t_dom if t_dom else float("nan")
+
+
+def main(csv=True, mesh="single"):
+    rows = load()
+    lines = []
+    for r in rows:
+        if r.get("mesh") != mesh:
+            continue
+        tag = f"{r['arch']}__{r['shape']}"
+        if r["status"] != "ok":
+            if str(r["status"]).startswith("skip"):
+                lines.append(f"roofline_{tag},0,SKIP")
+            else:
+                lines.append(f"roofline_{tag},0,FAIL")
+            continue
+        roof = r["roofline"]
+        t_dom = max(roof["t_compute_s"], roof["t_memory_s"],
+                    roof["t_collective_s"])
+        lines.append(
+            f"roofline_{tag},{t_dom*1e6:.0f},"
+            f"bottleneck={roof['bottleneck']}"
+            f"_rooflinefrac={fraction_of_roofline(roof):.3f}"
+            f"_useful={roof['useful_flops_ratio']:.2f}"
+            f"_gbdev={r.get('bytes_per_device', 0)/1e9:.1f}")
+    if csv:
+        for line in lines:
+            print(line)
+    return lines
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Benchmark harness: one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import table1_rcut, fig1_scaling, breakdown, \
+        kernels_bench, roofline_report
+
+    suites = [
+        ("table1_rcut (paper Table I)", table1_rcut.main),
+        ("fig1_scaling (paper Fig. 1)", fig1_scaling.main),
+        ("breakdown (paper §III-B)", breakdown.main),
+        ("kernels_bench", kernels_bench.main),
+        ("roofline_report (§Roofline)", roofline_report.main),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in suites:
+        print(f"# --- {name} ---")
+        try:
+            fn(csv=True)
+        except Exception as e:  # keep the harness running
+            failures += 1
+            print(f"# {name} FAILED: {e}", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

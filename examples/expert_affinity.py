@@ -1,0 +1,80 @@
+"""Framework-level integration of the paper's technique: cluster the
+MoE expert co-activation graph with GrB-pGrass to derive expert->device
+placement groups that minimize cross-group routing (an RCut objective!).
+
+Experts that co-fire for the same tokens want to live on the same
+device: a token routed to experts on 2 devices pays 2 partial outputs
+into the psum instead of 1.  The co-activation graph (experts = nodes,
+co-routing counts = weights) is exactly the balanced-min-cut input the
+paper's algorithm optimizes.
+
+    PYTHONPATH=src python examples/expert_affinity.py
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced_config
+from repro.core import PSCConfig, p_spectral_cluster, metrics
+from repro.grblas import SparseMatrix
+from repro.models import model as M
+from repro.models.moe import _router
+from repro.data import SyntheticTokens
+
+
+def co_activation_graph(cfg, params, n_batches=8, batch=8, seq=64):
+    """Run the router over synthetic batches; count expert co-routing."""
+    E = cfg.moe.n_experts
+    counts = np.zeros((E, E))
+    data = SyntheticTokens(cfg, batch=batch, seq=seq, seed=0)
+    router_w = params["blocks"]["ffn"]["router"][0]     # first MoE layer
+    embed = params["embed"]
+    for b in range(n_batches):
+        toks = data.batch_at(b)["tokens"]
+        x = embed["table"][toks].reshape(-1, cfg.d_model)
+        _, ids, _ = _router(cfg, router_w, x)
+        ids = np.asarray(ids)                            # (T, top_k)
+        for k1 in range(ids.shape[1]):
+            for k2 in range(k1 + 1, ids.shape[1]):
+                np.add.at(counts, (ids[:, k1], ids[:, k2]), 1.0)
+    counts = counts + counts.T
+    np.fill_diagonal(counts, 0.0)
+    r, c = np.nonzero(counts)
+    return SparseMatrix.from_coo(r, c, counts[r, c], (E, E))
+
+
+def main():
+    # a reduced MoE config (mixtral family, 4 experts) for CPU speed;
+    # the same pipeline runs on the full 256-expert deepseek graph
+    import dataclasses
+    from repro.models.config import MoEConfig
+    cfg = get_reduced_config("mixtral-8x22b")
+    cfg = dataclasses.replace(cfg, moe=MoEConfig(
+        n_experts=8, top_k=2, d_expert=64))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    W = co_activation_graph(cfg, params)
+    print(f"expert co-activation graph: {W.n_rows} experts, "
+          f"{W.nnz} weighted edges")
+
+    n_groups = 2
+    res = p_spectral_cluster(W, PSCConfig(
+        k=n_groups, p_target=1.4, newton_iters=10, tcg_iters=8,
+        kmeans_restarts=4, seed=0))
+    print(f"placement groups (expert -> device group): "
+          f"{res.labels.tolist()}")
+    rcut_p = res.rcut
+
+    # compare against the naive contiguous placement [0,0,0,0,1,1,1,1]
+    naive = np.repeat(np.arange(n_groups), W.n_rows // n_groups)
+    rcut_naive = float(metrics.rcut(W, naive, n_groups))
+    print(f"cross-group routing cost (RCut): "
+          f"pGrass {rcut_p:.2f} vs contiguous {rcut_naive:.2f}")
+    if rcut_p <= rcut_naive:
+        print("OK: p-spectral placement does not lose to contiguous")
+    else:
+        print("note: random router => placements statistically equivalent")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""repro.core — the paper's contribution: p-spectral clustering on the
+Grassmann manifold, with GraphBLAS-style algebra underneath."""
+from repro.core.psc import PSCConfig, PSCResult, p_spectral_cluster, spectral_cluster
+from repro.core.pmulti import p_multi
+from repro.core import plap, metrics, kmeans, lobpcg, grassmann, phi
+
+__all__ = [
+    "PSCConfig", "PSCResult", "p_spectral_cluster", "spectral_cluster",
+    "p_multi", "plap", "metrics", "kmeans", "lobpcg", "grassmann", "phi",
+]

@@ -1,0 +1,88 @@
+"""k-means discretization of the spectral coordinates, GraphBLAS style.
+
+The distance computation is one dense matmul (MXU-bound on TPU):
+  d(x, c) = ||x||^2 + ||c||^2 - 2 x.c
+and the assignment an argmin reduce — exactly the shape the paper folds
+into its GraphBLAS pipeline.  The fused Pallas kernel lives in
+kernels/kmeans_assign; this module is the jnp implementation + Lloyd loop.
+
+kmeans++ seeding, fixed-iteration Lloyd with empty-cluster re-seeding,
+multiple restarts keeping the best inertia.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sqdist(X: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    """(n,k_cent) squared distances via the matmul identity."""
+    xx = jnp.sum(X * X, axis=1, keepdims=True)
+    cc = jnp.sum(C * C, axis=1)[None, :]
+    return jnp.maximum(xx + cc - 2.0 * (X @ C.T), 0.0)
+
+
+def assign(X: jnp.ndarray, C: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmin(pairwise_sqdist(X, C), axis=1)
+
+
+def _plusplus_init(key, X: jnp.ndarray, k: int) -> jnp.ndarray:
+    """kmeans++ seeding (sequential, k small)."""
+    n = X.shape[0]
+    key, sub = jax.random.split(key)
+    first = jax.random.randint(sub, (), 0, n)
+    C0 = jnp.tile(X[first], (k, 1))
+
+    def body(i, carry):
+        C, key = carry
+        d2 = pairwise_sqdist(X, C)                        # (n,k)
+        # distance to nearest chosen centroid (first i valid)
+        mask = jnp.arange(k)[None, :] < i
+        dmin = jnp.min(jnp.where(mask, d2, jnp.inf), axis=1)
+        key, sub = jax.random.split(key)
+        probs = dmin / jnp.maximum(jnp.sum(dmin), 1e-30)
+        nxt = jax.random.choice(sub, n, p=probs)
+        return C.at[i].set(X[nxt]), key
+
+    C, _ = jax.lax.fori_loop(1, k, body, (C0, key))
+    return C
+
+
+def lloyd(X: jnp.ndarray, C0: jnp.ndarray, iters: int = 50) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Fixed-iteration Lloyd; empty clusters re-seeded to farthest points."""
+    k = C0.shape[0]
+
+    def body(C, _):
+        d2 = pairwise_sqdist(X, C)
+        a = jnp.argmin(d2, axis=1)
+        onehot = jax.nn.one_hot(a, k, dtype=X.dtype)      # (n,k)
+        counts = jnp.sum(onehot, axis=0)                  # (k,)
+        sums = onehot.T @ X                               # (k,d)
+        newC = sums / jnp.maximum(counts[:, None], 1.0)
+        # re-seed empties at the globally farthest point
+        far = X[jnp.argmax(jnp.min(d2, axis=1))]
+        newC = jnp.where(counts[:, None] > 0, newC, far[None, :])
+        return newC, None
+
+    C, _ = jax.lax.scan(body, C0, None, length=iters)
+    a = assign(X, C)
+    inertia = jnp.sum(jnp.min(pairwise_sqdist(X, C), axis=1))
+    return a, C, inertia
+
+
+@partial(jax.jit, static_argnames=("k", "restarts", "iters"))
+def kmeans(key, X: jnp.ndarray, k: int, restarts: int = 8,
+           iters: int = 50) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Multi-restart kmeans++: returns (labels (n,), centroids (k,d))."""
+    keys = jax.random.split(key, restarts)
+
+    def one(key):
+        C0 = _plusplus_init(key, X, k)
+        return lloyd(X, C0, iters)
+
+    labels, Cs, inertias = jax.vmap(one)(keys)
+    best = jnp.argmin(inertias)
+    return labels[best], Cs[best]

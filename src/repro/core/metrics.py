@@ -1,0 +1,55 @@
+"""Balanced graph-cut metrics (Table I of the paper) + clustering accuracy.
+
+All cut computations are expressed GraphBLAS-style:
+  cut(C, C-bar) = 1_C^T W 1_{C-bar}   (one SpMM with the indicator matrix)
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.grblas.containers import SparseMatrix
+
+
+def _indicator(labels: jnp.ndarray, k: int) -> jnp.ndarray:
+    return jax.nn.one_hot(labels, k, dtype=jnp.float32)      # (n,k)
+
+
+def cut_matrix(W: SparseMatrix, labels, k: int) -> jnp.ndarray:
+    """M[a,b] = sum of edge weights between cluster a and b (directed nnz)."""
+    labels = jnp.asarray(labels)
+    H = _indicator(labels, k)
+    WH = jax.ops.segment_sum(W.vals[:, None] * H[W.cols], W.rows, W.n_rows)
+    return H.T @ WH                                           # (k,k)
+
+
+def rcut(W: SparseMatrix, labels, k: int) -> jnp.ndarray:
+    """RCut = sum_i cut(C_i, C-bar_i) / |C_i|  (paper's quality metric)."""
+    labels = jnp.asarray(labels)
+    M = cut_matrix(W, labels, k)
+    sizes = jnp.bincount(labels, length=k).astype(jnp.float32)
+    cutv = jnp.sum(M, axis=1) - jnp.diag(M)
+    return jnp.sum(jnp.where(sizes > 0, cutv / jnp.maximum(sizes, 1), 0.0))
+
+
+def ncut(W: SparseMatrix, labels, k: int) -> jnp.ndarray:
+    """NCut = sum_i cut(C_i, C-bar_i) / vol(C_i)."""
+    labels = jnp.asarray(labels)
+    M = cut_matrix(W, labels, k)
+    vol = jnp.sum(M, axis=1)
+    cutv = vol - jnp.diag(M)
+    return jnp.sum(jnp.where(vol > 0, cutv / jnp.maximum(vol, 1e-12), 0.0))
+
+
+def clustering_accuracy(pred, truth, k: int) -> float:
+    """Best-permutation accuracy via Hungarian matching on the confusion
+    matrix (scipy linear_sum_assignment)."""
+    from scipy.optimize import linear_sum_assignment
+
+    pred = np.asarray(pred)
+    truth = np.asarray(truth)
+    C = np.zeros((k, k), np.int64)
+    np.add.at(C, (pred, truth), 1)
+    r, c = linear_sum_assignment(-C)
+    return float(C[r, c].sum()) / len(pred)

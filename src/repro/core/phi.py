@@ -1,0 +1,38 @@
+"""phi_p and smoothed p-powers — the scalar nonlinearity of the p-Laplacian.
+
+For p<2, |x|^p is not C^2 at 0; Newton needs the eps-smoothed surrogate
+   s_eps(x) = (x^2 + eps)^{p/2}
+whose derivative is phi_eps(x) = p (x^2+eps)^{(p-2)/2} x, matching the
+smoothing used in Pasadakis et al. 2022 [4].  eps=0 recovers the exact
+p-power (used for function values / metrics; derivatives use eps>0).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def p_power(x, p: float, eps: float = 0.0):
+    """|x|^p (eps-smoothed: (x^2+eps)^{p/2})."""
+    if eps == 0.0:
+        return jnp.abs(x) ** p
+    return (x * x + eps) ** (p / 2.0)
+
+
+def phi(x, p: float, eps: float = 0.0):
+    """d/dx of p_power / p: phi_p(x) = |x|^{p-1} sign(x) (smoothed)."""
+    if eps == 0.0:
+        return jnp.abs(x) ** (p - 1.0) * jnp.sign(x)
+    return (x * x + eps) ** ((p - 2.0) / 2.0) * x
+
+
+def phi_prime(x, p: float, eps: float = 0.0):
+    """d/dx phi_p(x) = (p-1)|x|^{p-2} (smoothed: keeps >=0 for p>1)."""
+    if eps == 0.0:
+        return (p - 1.0) * jnp.abs(x) ** (p - 2.0)
+    x2e = x * x + eps
+    return x2e ** ((p - 2.0) / 2.0) + (p - 2.0) * x * x * x2e ** ((p - 4.0) / 2.0)
+
+
+def p_norm_p(u, p: float, eps: float = 0.0, axis=0):
+    """||u||_p^p along axis (smoothed)."""
+    return jnp.sum(p_power(u, p, eps), axis=axis)

@@ -1,0 +1,166 @@
+"""The p-Laplacian functional F_p, its Euclidean gradient and Hessian apply.
+
+For one eigenvector column u with graph weights W (symmetric):
+
+    A(u) = 1/2 sum_ij w_ij s(u_i - u_j)       s(x) = (x^2+eps)^{p/2}
+    B(u) = sum_i s(u_i)                        (= ||u||_p^p, smoothed)
+    F(u) = A(u) / B(u)          F_p(U) = sum_l F(u^l)
+
+Closed forms (derived; pinned to jax autodiff in tests/test_plap.py):
+
+    grad A   = p * Delta_p u              (Delta_p u)_i = sum_j w_ij phi(u_i-u_j)
+    grad B   = p * phi(u)
+    grad F   = (p/B) [Delta_p u - F * phi(u)]
+
+    Hess A   = p [diag(W-hat 1) - W-hat]   w-hat_ij = w_ij phi'(u_i-u_j)
+    Hess B   = p diag(phi'(u))
+    Hess F @ eta = (1/B) Hess A eta - (F/B) Hess B eta
+                   - (1/B^2)[gA (gB.eta) + gB (gA.eta)] + (2F/B^2) gB (gB.eta)
+
+Two HVP implementations:
+  * hess_eta_graphblas  — Algorithm-1-faithful: materialize D[l] and the
+    off-diagonal W-hat[l] (new vals on the fixed sparsity), then
+    vxm + eWiseApply per column (the paper's Alg. 1), plus the rank-one
+    quotient corrections as dot/axpy vector ops.
+  * hess_eta_matrix_free — TPU-adapted: one fused edge-semiring SpMM, no
+    W-hat materialization (DESIGN.md §2, adaptation 4).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.grblas.containers import SparseMatrix
+from repro.grblas import ops as grb
+from repro.grblas.semiring import reals_ring
+from repro.core import phi as PHI
+
+
+class PLapParts(NamedTuple):
+    A: jnp.ndarray      # (k,) numerators
+    B: jnp.ndarray      # (k,) denominators
+    F: jnp.ndarray      # (k,) Rayleigh quotients
+    dpu: jnp.ndarray    # (n,k) Delta_p u per column
+    phi_u: jnp.ndarray  # (n,k)
+
+
+def _edge_diffs(W: SparseMatrix, U: jnp.ndarray) -> jnp.ndarray:
+    """d_e = u_i - u_j per nnz edge (directed; W stores both (i,j),(j,i))."""
+    return U[W.rows] - U[W.cols]
+
+
+def parts(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float) -> PLapParts:
+    """All shared quantities for value/grad in one edge pass."""
+    d = _edge_diffs(W, U)                                    # (nnz, k)
+    w = W.vals[:, None]
+    A = 0.5 * jnp.sum(w * PHI.p_power(d, p, eps), axis=0)    # (k,)
+    B = jnp.sum(PHI.p_power(U, p, eps), axis=0)              # (k,)
+    contrib = w * PHI.phi(d, p, eps)
+    dpu = jax.ops.segment_sum(contrib, W.rows, W.n_rows)     # (n,k)
+    return PLapParts(A=A, B=B, F=A / B, dpu=dpu, phi_u=PHI.phi(U, p, eps))
+
+
+def value(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9) -> jnp.ndarray:
+    pr = parts(W, U, p, eps)
+    return jnp.sum(pr.F)
+
+
+def euc_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9) -> jnp.ndarray:
+    """EucGrad: (p/B)[Delta_p u - F phi(u)] columnwise. (n,k)."""
+    pr = parts(W, U, p, eps)
+    return (p / pr.B) * (pr.dpu - pr.F * pr.phi_u)
+
+
+def value_and_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9):
+    pr = parts(W, U, p, eps)
+    g = (p / pr.B) * (pr.dpu - pr.F * pr.phi_u)
+    return jnp.sum(pr.F), g
+
+
+# ---------------------------------------------------------------- HVP paths
+
+def hessian_weights(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
+    """w-hat_e = w_e phi'(u_i - u_j) per edge and column. (nnz,k)."""
+    d = _edge_diffs(W, U)
+    return W.vals[:, None] * PHI.phi_prime(d, p, eps)
+
+
+def build_alg1_operands(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
+    """The paper's Algorithm-1 inputs: per column l,
+       D[l] = diag(Hess A^l) / p   (vector)  and
+       H[l] = off-diagonal W-hat^l (SparseMatrix vals on W's pattern).
+    Returned stacked over columns: D (n,k), What_vals (nnz,k)."""
+    what = hessian_weights(W, U, p, eps)                     # (nnz,k)
+    D = jax.ops.segment_sum(what, W.rows, W.n_rows)          # (n,k) row sums
+    return D, what
+
+
+def hess_eta_graphblas(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
+                       p: float, eps: float = 1e-9,
+                       operands=None) -> jnp.ndarray:
+    """Algorithm-1-faithful HVP (materialized W-hat), full quotient rule.
+
+    Per column l (all fused):
+      1. v  = vxm(eta, What[l], reals_ring)        [Alg.1 line 7]
+      2. w  = eWiseApply(eta, D[l], mul)           [Alg.1 line 8]
+      3. hA = p * (w - v)                          [Alg.1 line 9 + scale]
+    then the rank-one quotient corrections (vector dots / axpys).
+    """
+    pr = parts(W, U, p, eps)
+    if operands is None:
+        operands = build_alg1_operands(W, U, p, eps)
+    D, what_vals = operands
+
+    # lines 6-9 of Algorithm 1, k columns fused through one SpMM:
+    v = jax.ops.segment_sum(what_vals * eta[W.cols], W.rows, W.n_rows)
+    w = grb.e_wise_apply(eta, D, jnp.multiply)
+    hA_eta = p * grb.e_wise_apply(w, v, jnp.subtract)        # Hess A @ eta
+
+    return _quotient_correct(pr, U, eta, hA_eta, p, eps)
+
+
+def hess_eta_matrix_free(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
+                         p: float, eps: float = 1e-9) -> jnp.ndarray:
+    """TPU-adapted HVP: fused edge pass, nothing materialized.
+
+    Hess A @ eta per column = p * sum_j w-hat_ij (eta_i - eta_j)."""
+    pr = parts(W, U, p, eps)
+    d = _edge_diffs(W, U)
+    what = W.vals[:, None] * PHI.phi_prime(d, p, eps)
+    de = eta[W.rows] - eta[W.cols]
+    hA_eta = p * jax.ops.segment_sum(what * de, W.rows, W.n_rows)
+    return _quotient_correct(pr, U, eta, hA_eta, p, eps)
+
+
+def _quotient_correct(pr: PLapParts, U, eta, hA_eta, p, eps):
+    """Assemble Hess F @ eta from Hess A @ eta + quotient-rule terms."""
+    gA = p * pr.dpu                                   # grad A (n,k)
+    gB = p * pr.phi_u                                 # grad B (n,k)
+    hB_eta = p * PHI.phi_prime(U, p, eps) * eta       # Hess B diag apply
+    gB_eta = jnp.sum(gB * eta, axis=0)                # (k,)
+    gA_eta = jnp.sum(gA * eta, axis=0)
+    B, F = pr.B, pr.F
+    return (hA_eta / B
+            - (F / B) * hB_eta
+            - (gA * gB_eta + gB * gA_eta) / (B * B)
+            + (2.0 * F / (B * B)) * gB * gB_eta)
+
+
+# ------------------------------------------------------------- autodiff oracle
+
+def autodiff_value(W: SparseMatrix, p: float, eps: float):
+    """F_p as a closure for jax.grad / jvp-of-grad oracles in tests."""
+    def f(U):
+        d = U[W.rows] - U[W.cols]
+        A = 0.5 * jnp.sum(W.vals[:, None] * PHI.p_power(d, p, eps), axis=0)
+        B = jnp.sum(PHI.p_power(U, p, eps), axis=0)
+        return jnp.sum(A / B)
+    return f
+
+
+def autodiff_hvp(W: SparseMatrix, U, eta, p: float, eps: float = 1e-9):
+    f = autodiff_value(W, p, eps)
+    return jax.jvp(jax.grad(f), (U,), (eta,))[1]

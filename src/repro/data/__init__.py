@@ -1,0 +1,3 @@
+from repro.data.tokens import SyntheticTokens, batch_specs
+
+__all__ = ["SyntheticTokens", "batch_specs"]

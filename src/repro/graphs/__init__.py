@@ -1,0 +1,12 @@
+from repro.graphs.generators import (
+    delaunay_graph, grid_graph, ring_of_cliques, sbm_graph, gaussian_blobs_knn,
+)
+from repro.graphs.mmio import read_matrix_market
+
+__all__ = [
+    "delaunay_graph", "grid_graph", "ring_of_cliques", "sbm_graph",
+    "gaussian_blobs_knn", "read_matrix_market",
+]
+from repro.graphs.partition import partition, cut_edges
+
+__all__ += ["partition", "cut_edges"]

@@ -1,0 +1,130 @@
+"""Graph generators reproducing the paper's test families.
+
+The paper evaluates on SuiteSparse `delaunay_nXX` graphs: Delaunay
+triangulations of 2^r uniform points in the unit square (n=2^r nodes,
+m ~= 3*2^r undirected edges => ~6*2^r stored nnz).  ``delaunay_graph(r)``
+regenerates that family with scipy.spatial.Delaunay; the originals load
+through mmio.read_matrix_market when available.
+
+Also: planted-partition generators (SBM, ring-of-cliques, gaussian-blob
+kNN) with known ground truth for quality tests.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.grblas.containers import SparseMatrix
+
+
+def _symmetrize(rows, cols, vals, n):
+    """Make the edge list symmetric, drop self loops and duplicates."""
+    keep = rows != cols
+    rows, cols, vals = rows[keep], cols[keep], vals[keep]
+    r = np.concatenate([rows, cols])
+    c = np.concatenate([cols, rows])
+    v = np.concatenate([vals, vals])
+    key = r.astype(np.int64) * n + c
+    _, idx = np.unique(key, return_index=True)
+    return r[idx], c[idx], v[idx]
+
+
+def _to_matrix(rows, cols, vals, n, build_ell=True, build_bsr=False,
+               block_size=128) -> SparseMatrix:
+    rows, cols, vals = _symmetrize(np.asarray(rows), np.asarray(cols),
+                                   np.asarray(vals, np.float64), n)
+    return SparseMatrix.from_coo(rows, cols, vals, (n, n),
+                                 build_ell=build_ell, build_bsr=build_bsr,
+                                 block_size=block_size)
+
+
+def delaunay_graph(r: int, seed: int = 0, locality_order: bool = True,
+                   **kw) -> Tuple[SparseMatrix, np.ndarray]:
+    """Delaunay triangulation of n=2^r uniform points in the unit square.
+
+    locality_order sorts points by a Hilbert-like (Morton) key first so
+    that matrix rows have spatial locality — the BSR layout then has low
+    fill-in (the TPU adaptation relies on this; see DESIGN.md §2).
+    Returns (W, points).
+    """
+    from scipy.spatial import Delaunay
+
+    n = 2 ** r
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    if locality_order:
+        # 16-bit Morton interleave
+        xi = (pts[:, 0] * 65535).astype(np.uint64)
+        yi = (pts[:, 1] * 65535).astype(np.uint64)
+        def spread(a):
+            a = (a | (a << 8)) & 0x00FF00FF
+            a = (a | (a << 4)) & 0x0F0F0F0F
+            a = (a | (a << 2)) & 0x33333333
+            a = (a | (a << 1)) & 0x55555555
+            return a
+        key = spread(xi) | (spread(yi) << 1)
+        pts = pts[np.argsort(key)]
+    tri = Delaunay(pts)
+    s = tri.simplices
+    rows = np.concatenate([s[:, 0], s[:, 1], s[:, 2]])
+    cols = np.concatenate([s[:, 1], s[:, 2], s[:, 0]])
+    vals = np.ones(len(rows))
+    return _to_matrix(rows, cols, vals, n, **kw), pts
+
+
+def grid_graph(nx: int, ny: int, **kw) -> SparseMatrix:
+    """4-connected nx x ny grid (Delaunay-like banded structure)."""
+    idx = np.arange(nx * ny).reshape(ny, nx)
+    r = np.concatenate([idx[:, :-1].ravel(), idx[:-1, :].ravel()])
+    c = np.concatenate([idx[:, 1:].ravel(), idx[1:, :].ravel()])
+    return _to_matrix(r, c, np.ones(len(r)), nx * ny, **kw)
+
+
+def ring_of_cliques(n_cliques: int, clique_size: int, bridge_w: float = 0.1,
+                    **kw) -> Tuple[SparseMatrix, np.ndarray]:
+    """k cliques joined in a ring by weak bridges; ground truth = clique id."""
+    n = n_cliques * clique_size
+    rows, cols, vals = [], [], []
+    for ci in range(n_cliques):
+        base = ci * clique_size
+        for a in range(clique_size):
+            for b in range(a + 1, clique_size):
+                rows.append(base + a); cols.append(base + b); vals.append(1.0)
+        nxt = ((ci + 1) % n_cliques) * clique_size
+        rows.append(base); cols.append(nxt); vals.append(bridge_w)
+    truth = np.repeat(np.arange(n_cliques), clique_size)
+    return _to_matrix(rows, cols, vals, n, **kw), truth
+
+
+def sbm_graph(sizes, p_in: float, p_out: float, seed: int = 0,
+              **kw) -> Tuple[SparseMatrix, np.ndarray]:
+    """Stochastic block model with blocks `sizes`."""
+    rng = np.random.default_rng(seed)
+    n = int(sum(sizes))
+    truth = np.repeat(np.arange(len(sizes)), sizes)
+    r, c = np.triu_indices(n, k=1)
+    prob = np.where(truth[r] == truth[c], p_in, p_out)
+    keep = rng.random(len(r)) < prob
+    return _to_matrix(r[keep], c[keep], np.ones(keep.sum()), n, **kw), truth
+
+
+def gaussian_blobs_knn(n_per: int, k_blobs: int, knn: int = 10,
+                       sigma: float = 0.35, spread: float = 3.0,
+                       seed: int = 0, **kw) -> Tuple[SparseMatrix, np.ndarray]:
+    """Gaussian blobs in 2D + Gaussian-weighted kNN graph (classic spectral
+    clustering benchmark; exercises weighted edges)."""
+    rng = np.random.default_rng(seed)
+    centers = spread * np.stack(
+        [np.cos(2 * np.pi * np.arange(k_blobs) / k_blobs),
+         np.sin(2 * np.pi * np.arange(k_blobs) / k_blobs)], axis=1)
+    pts = np.concatenate(
+        [c + sigma * rng.standard_normal((n_per, 2)) for c in centers])
+    truth = np.repeat(np.arange(k_blobs), n_per)
+    d2 = ((pts[:, None, :] - pts[None, :, :]) ** 2).sum(-1)
+    np.fill_diagonal(d2, np.inf)
+    nbr = np.argsort(d2, axis=1)[:, :knn]
+    rows = np.repeat(np.arange(len(pts)), knn)
+    cols = nbr.ravel()
+    vals = np.exp(-d2[rows, cols] / (2 * sigma ** 2))
+    return _to_matrix(rows, cols, vals, len(pts), **kw), truth

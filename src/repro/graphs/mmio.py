@@ -1,0 +1,35 @@
+"""Matrix Market loader for the SuiteSparse graphs the paper uses
+(delaunay_n16 .. delaunay_n23).  Zero-dependency beyond scipy."""
+from __future__ import annotations
+
+import gzip
+from pathlib import Path
+
+import numpy as np
+
+from repro.grblas.containers import SparseMatrix
+
+
+def read_matrix_market(path, build_ell: bool = True, build_bsr: bool = False,
+                       block_size: int = 128) -> SparseMatrix:
+    path = Path(path)
+    opener = gzip.open if path.suffix == ".gz" else open
+    with opener(path, "rt") as f:
+        header = f.readline().strip().lower()
+        symmetric = "symmetric" in header
+        line = f.readline()
+        while line.startswith("%"):
+            line = f.readline()
+        n_rows, n_cols, nnz = (int(t) for t in line.split()[:3])
+        data = np.loadtxt(f, max_rows=nnz, ndmin=2)
+    rows = data[:, 0].astype(np.int64) - 1
+    cols = data[:, 1].astype(np.int64) - 1
+    vals = data[:, 2] if data.shape[1] > 2 else np.ones(len(rows))
+    if symmetric:
+        off = rows != cols
+        rows, cols, vals = (np.concatenate([rows, cols[off]]),
+                            np.concatenate([cols, rows[off]]),
+                            np.concatenate([vals, vals[off]]))
+    return SparseMatrix.from_coo(rows, cols, vals, (n_rows, n_cols),
+                                 build_ell=build_ell, build_bsr=build_bsr,
+                                 block_size=block_size)

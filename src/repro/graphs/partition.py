@@ -1,0 +1,68 @@
+"""Graph partitioning for device placement — the framework-level use of
+the paper's own algorithm (DESIGN.md §4).
+
+``partition(W, n_parts)`` runs GrB-pGrass to get a balanced min-RCut
+assignment, then ``make_row_partition(W, n_shards, assignment=...)``
+places same-cluster rows on the same device so the distributed SpMM's
+halo exchange touches only cut edges (see benchmarks/fig1_scaling.py's
+naive-vs-partitioned projection).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.grblas.containers import SparseMatrix
+from repro.core import PSCConfig, p_spectral_cluster, metrics
+
+
+def partition(W: SparseMatrix, n_parts: int, p_target: float = 1.4,
+              seed: int = 0, balance: bool = True,
+              cfg: Optional[PSCConfig] = None) -> Tuple[np.ndarray, dict]:
+    """Balanced min-RCut partition of graph W into n_parts.
+
+    Returns (assignment (n,), info) where info carries the cut metrics
+    and the per-part sizes.  ``balance=True`` rebalances overfull parts
+    by moving their lowest-margin nodes (greedy, keeps near-equal sizes
+    as required for device placement)."""
+    cfg = cfg or PSCConfig(k=n_parts, p_target=p_target, seed=seed,
+                           newton_iters=15, tcg_iters=10, kmeans_restarts=4)
+    res = p_spectral_cluster(W, cfg)
+    labels = np.asarray(res.labels).copy()
+
+    if balance:
+        n = W.n_rows
+        target = -(-n // n_parts)
+        U = np.asarray(res.U)
+        # margin: distance to the assigned cluster's centroid
+        for _ in range(n_parts):
+            sizes = np.bincount(labels, minlength=n_parts)
+            over = np.argmax(sizes)
+            under = np.argmin(sizes)
+            if sizes[over] <= target or sizes[under] >= target:
+                break
+            movable = np.nonzero(labels == over)[0]
+            cen_over = U[labels == over].mean(0)
+            cen_under = U[labels == under].mean(0)
+            # move the nodes closest to the underfull centroid
+            gain = (np.linalg.norm(U[movable] - cen_over, axis=1)
+                    - np.linalg.norm(U[movable] - cen_under, axis=1))
+            k_move = min(sizes[over] - target, target - sizes[under])
+            labels[movable[np.argsort(-gain)[:k_move]]] = under
+
+    info = {
+        "rcut": float(metrics.rcut(W, labels, n_parts)),
+        "ncut": float(metrics.ncut(W, labels, n_parts)),
+        "sizes": np.bincount(labels, minlength=n_parts).tolist(),
+        "p_path": res.p_path,
+    }
+    return labels, info
+
+
+def cut_edges(W: SparseMatrix, labels: np.ndarray) -> int:
+    """Number of (directed) nnz crossing the partition — the halo volume
+    of the distributed SpMM under this placement."""
+    r = np.asarray(W.rows)
+    c = np.asarray(W.cols)
+    return int(np.sum(labels[r] != labels[c]))

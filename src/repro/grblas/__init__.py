@@ -1,0 +1,30 @@
+"""grblas — a GraphBLAS-style algebraic layer in JAX.
+
+Mirrors the C++ GraphBLAS concepts the paper builds on:
+  * algebraic containers  -> SparseMatrix (CSR / padded-ELL / 128x128 BSR), dense jnp vectors
+  * algebraic operators   -> vxm / mxv / mxm (SpMV / SpMM under a semiring)
+  * algebraic relations   -> Semiring(add, mul, zero, one), plus the
+    edge-semiring extension used for the matrix-free p-Laplacian apply.
+
+The distributed layer (dist.py) maps the auto-parallelisation role of the
+C++ runtime onto shard_map over a device mesh.
+"""
+from repro.grblas.semiring import (
+    Semiring,
+    EdgeSemiring,
+    reals_ring,
+    min_plus_ring,
+    max_times_ring,
+    boolean_ring,
+    plap_edge_semiring,
+)
+from repro.grblas.containers import SparseMatrix
+from repro.grblas.ops import vxm, mxv, mxm, e_wise_apply, apply, reduce as grb_reduce
+from repro.grblas.dist import dist_mxm, make_row_partition
+
+__all__ = [
+    "Semiring", "EdgeSemiring", "reals_ring", "min_plus_ring",
+    "max_times_ring", "boolean_ring", "plap_edge_semiring",
+    "SparseMatrix", "vxm", "mxv", "mxm", "e_wise_apply", "apply",
+    "grb_reduce", "dist_mxm", "make_row_partition",
+]

@@ -1,0 +1,150 @@
+"""Algebraic containers: sparse matrices in JAX-friendly layouts.
+
+A ``SparseMatrix`` carries up to three layouts of the same matrix:
+
+  * COO   (rows, cols, vals)           — construction + segment-sum SpMV
+  * CSR   (indptr, cols, vals)         — host-side utilities / export
+  * ELL   (ell_cols, ell_vals, pad)    — padded rows, vectorized gather SpMV
+  * BSR   (block ptrs/idx, dense tiles)— 128x128 dense tiles for the MXU
+                                          Pallas kernel (kernels/bsr_spmm)
+
+All device arrays are static-shaped so every op jits.  Construction is
+host-side (numpy/scipy); the resulting container is a pytree of jnp
+arrays and can be donated/sharded.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SparseMatrix:
+    n_rows: int
+    n_cols: int
+    nnz: int
+    # COO (always present, sorted by row then col)
+    rows: jnp.ndarray  # (nnz,) int32
+    cols: jnp.ndarray  # (nnz,) int32
+    vals: jnp.ndarray  # (nnz,) dtype
+    # ELL (optional)
+    ell_cols: Optional[jnp.ndarray] = None  # (n_rows, max_nnz) int32, pad=row i itself
+    ell_vals: Optional[jnp.ndarray] = None  # (n_rows, max_nnz) dtype, pad=0
+    # BSR (optional, block = bs x bs dense tiles)
+    block_size: int = 0
+    bsr_indptr: Optional[np.ndarray] = None   # host (n_row_blocks+1,) — static metadata
+    bsr_indices: Optional[jnp.ndarray] = None  # (n_blocks,) int32 col-block ids
+    bsr_blocks: Optional[jnp.ndarray] = None   # (n_blocks, bs, bs) dtype
+    bsr_row_ids: Optional[jnp.ndarray] = None  # (n_blocks,) int32 row-block ids
+
+    # ---- pytree protocol ----
+    def tree_flatten(self):
+        children = (self.rows, self.cols, self.vals, self.ell_cols,
+                    self.ell_vals, self.bsr_indices, self.bsr_blocks,
+                    self.bsr_row_ids)
+        aux = (self.n_rows, self.n_cols, self.nnz, self.block_size,
+               None if self.bsr_indptr is None else tuple(self.bsr_indptr.tolist()))
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        rows, cols, vals, ell_cols, ell_vals, bsr_indices, bsr_blocks, bsr_row_ids = children
+        n_rows, n_cols, nnz, block_size, indptr = aux
+        return cls(n_rows=n_rows, n_cols=n_cols, nnz=nnz, rows=rows, cols=cols,
+                   vals=vals, ell_cols=ell_cols, ell_vals=ell_vals,
+                   block_size=block_size,
+                   bsr_indptr=None if indptr is None else np.asarray(indptr, np.int64),
+                   bsr_indices=bsr_indices, bsr_blocks=bsr_blocks,
+                   bsr_row_ids=bsr_row_ids)
+
+    # ---- constructors ----
+    @staticmethod
+    def from_coo(rows, cols, vals, shape: Tuple[int, int],
+                 build_ell: bool = True, build_bsr: bool = False,
+                 block_size: int = 128, dtype=jnp.float32) -> "SparseMatrix":
+        rows = np.asarray(rows, np.int64)
+        cols = np.asarray(cols, np.int64)
+        vals = np.asarray(vals)
+        order = np.lexsort((cols, rows))
+        rows, cols, vals = rows[order], cols[order], vals[order]
+        n_rows, n_cols = shape
+        nnz = len(vals)
+
+        mat = SparseMatrix(
+            n_rows=n_rows, n_cols=n_cols, nnz=nnz,
+            rows=jnp.asarray(rows, jnp.int32),
+            cols=jnp.asarray(cols, jnp.int32),
+            vals=jnp.asarray(vals, dtype),
+        )
+        if build_ell:
+            mat._build_ell(rows, cols, vals, dtype)
+        if build_bsr:
+            mat._build_bsr(rows, cols, vals, block_size, dtype)
+        return mat
+
+    @staticmethod
+    def from_scipy(sp, build_ell: bool = True, build_bsr: bool = False,
+                   block_size: int = 128, dtype=jnp.float32) -> "SparseMatrix":
+        sp = sp.tocoo()
+        return SparseMatrix.from_coo(sp.row, sp.col, sp.data, sp.shape,
+                                     build_ell=build_ell, build_bsr=build_bsr,
+                                     block_size=block_size, dtype=dtype)
+
+    # ---- layout builders (host-side) ----
+    def _build_ell(self, rows, cols, vals, dtype):
+        n = self.n_rows
+        counts = np.bincount(rows, minlength=n)
+        max_nnz = max(int(counts.max()) if n else 0, 1)
+        ell_cols = np.tile(np.arange(n, dtype=np.int64)[:, None], (1, max_nnz))
+        ell_vals = np.zeros((n, max_nnz), np.float64)
+        # position of each nnz within its row (rows pre-sorted)
+        pos = np.arange(len(rows)) - np.repeat(
+            np.concatenate([[0], np.cumsum(counts)[:-1]]), counts)
+        ell_cols[rows, pos] = cols
+        ell_vals[rows, pos] = vals
+        self.ell_cols = jnp.asarray(ell_cols, jnp.int32)
+        self.ell_vals = jnp.asarray(ell_vals, dtype)
+
+    def _build_bsr(self, rows, cols, vals, bs, dtype):
+        n_rb = -(-self.n_rows // bs)
+        rb, cb = rows // bs, cols // bs
+        keys = rb * n_rb * 0 + rb  # row-block major ordering
+        block_key = rb.astype(np.int64) * (-(-self.n_cols // bs)) + cb
+        uniq, inv = np.unique(block_key, return_inverse=True)
+        n_blocks = len(uniq)
+        blocks = np.zeros((n_blocks, bs, bs), np.float64)
+        blocks[inv, rows % bs, cols % bs] = vals
+        u_rb = (uniq // (-(-self.n_cols // bs))).astype(np.int64)
+        u_cb = (uniq % (-(-self.n_cols // bs))).astype(np.int64)
+        indptr = np.zeros(n_rb + 1, np.int64)
+        np.add.at(indptr, u_rb + 1, 1)
+        indptr = np.cumsum(indptr)
+        self.block_size = bs
+        self.bsr_indptr = indptr
+        self.bsr_indices = jnp.asarray(u_cb, jnp.int32)
+        self.bsr_blocks = jnp.asarray(blocks, dtype)
+        self.bsr_row_ids = jnp.asarray(u_rb, jnp.int32)
+        _ = keys
+
+    # ---- conveniences ----
+    def to_dense(self) -> jnp.ndarray:
+        d = jnp.zeros((self.n_rows, self.n_cols), self.vals.dtype)
+        return d.at[self.rows, self.cols].add(self.vals)
+
+    def row_degrees(self) -> jnp.ndarray:
+        return jax.ops.segment_sum(jnp.ones_like(self.vals), self.rows, self.n_rows)
+
+    def row_sums(self) -> jnp.ndarray:
+        return jax.ops.segment_sum(self.vals, self.rows, self.n_rows)
+
+    @property
+    def fill_ratio(self) -> float:
+        """BSR stored-value inflation vs nnz (1.0 = no padding waste)."""
+        if self.bsr_blocks is None:
+            return float("nan")
+        return float(self.bsr_blocks.size) / max(self.nnz, 1)

@@ -1,0 +1,117 @@
+"""Distributed SpMM: the shard_map analogue of the C++ runtime's
+auto-parallelised vxm.
+
+Row-block 1-D partition: device d owns rows [d*B, (d+1)*B); the input
+multivector is all-gathered along the ``data`` axis (vector bytes ≪
+matrix bytes for k ≤ 16), outputs stay sharded.  This mirrors the
+paper's shared-memory row-parallel SpMV, with the NUMA domain replaced
+by a mesh axis.  A 2-D (data × model) partition with psum over ``model``
+is provided for matrices whose rows outgrow one device.
+
+Graph-aware placement: ``make_row_partition`` can take a clustering
+assignment (from repro.core.psc — the paper's own algorithm) to permute
+rows so that communication-heavy rows land on the same device; this is
+the framework-level integration of the paper's technique (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+from jax import shard_map
+
+from repro.grblas.containers import SparseMatrix
+from repro.grblas.semiring import Semiring, EdgeSemiring, reals_ring
+
+
+class RowPartitionedMatrix:
+    """ELL layout padded + reshaped to (n_shards, rows_per_shard, max_nnz)."""
+
+    def __init__(self, ell_cols, ell_vals, n_rows, n_cols, n_shards, perm=None):
+        self.ell_cols = ell_cols    # (S, R, M) int32, global col ids
+        self.ell_vals = ell_vals    # (S, R, M)
+        self.n_rows = n_rows        # original (unpadded) row count
+        self.n_cols = n_cols
+        self.n_shards = n_shards
+        self.perm = perm            # optional row permutation applied
+
+
+def make_row_partition(A: SparseMatrix, n_shards: int,
+                       assignment: Optional[np.ndarray] = None) -> RowPartitionedMatrix:
+    """Split A's ELL rows into n_shards contiguous blocks (host-side).
+
+    If ``assignment`` (a cluster id per row, e.g. from p-spectral
+    clustering) is given, rows are permuted so same-cluster rows are
+    contiguous -> fewer remote touches per shard.
+    """
+    assert A.ell_cols is not None, "build_ell=True required"
+    ell_cols = np.asarray(A.ell_cols)
+    ell_vals = np.asarray(A.ell_vals)
+    n, m = ell_cols.shape
+    perm = None
+    if assignment is not None:
+        perm = np.argsort(np.asarray(assignment), kind="stable")
+        inv = np.empty_like(perm)
+        inv[perm] = np.arange(n)
+        # permute rows AND remap column ids into the permuted numbering,
+        # so the partitioned operator acts on the permuted vector space
+        ell_cols, ell_vals = inv[ell_cols[perm]].astype(np.int32), ell_vals[perm]
+    pad = (-n) % n_shards
+    if pad:
+        # padded rows reference column 0 with weight 0 (no-ops)
+        ell_cols = np.concatenate([ell_cols, np.zeros((pad, m), np.int32)])
+        ell_vals = np.concatenate([ell_vals, np.zeros((pad, m), ell_vals.dtype)])
+    R = (n + pad) // n_shards
+    return RowPartitionedMatrix(
+        ell_cols=jnp.asarray(ell_cols.reshape(n_shards, R, m)),
+        ell_vals=jnp.asarray(ell_vals.reshape(n_shards, R, m)),
+        n_rows=n, n_cols=A.n_cols, n_shards=n_shards, perm=perm)
+
+
+def dist_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
+             axis: str = "data", ring: Semiring | EdgeSemiring = reals_ring,
+             p: float = 2.0, eps: float = 1e-9) -> jnp.ndarray:
+    """Distributed SpMM: rows sharded over ``axis``, X gathered per shard.
+
+    X: (n_padded,) or (n_padded, k) row-sharded on entry; returns the
+    product with the same sharding.  Inside each shard we run the same
+    ELL kernel as ops._ell_spmm, so dist == single-device numerically.
+    """
+    n_pad = Ap.ell_cols.shape[0] * Ap.ell_cols.shape[1]
+    vec_spec = P(axis) if X.ndim == 1 else P(axis, None)
+
+    def _local_row_ids(rows_per, axis_name):
+        idx = jax.lax.axis_index(axis_name)
+        return idx * rows_per + jnp.arange(rows_per)
+
+    def local(ell_cols, ell_vals, x_local):
+        ell_cols = ell_cols[0]                            # (R, M) this shard
+        ell_vals = ell_vals[0]
+        x_full = jax.lax.all_gather(x_local, axis, axis=0, tiled=True)
+        gathered = x_full[ell_cols]                       # (R, M[, k])
+        vals = ell_vals if x_full.ndim == 1 else ell_vals[..., None]
+        if isinstance(ring, EdgeSemiring):
+            x_rows = x_full[_local_row_ids(ell_cols.shape[0], axis)]
+            if x_full.ndim == 2:
+                x_rows = x_rows[:, None, :]
+            else:
+                x_rows = x_rows[:, None]
+            contrib = ring.edge_mul(vals, gathered, x_rows)
+        else:
+            contrib = ring.mul(vals, gathered)
+        return jnp.sum(contrib, axis=1)
+
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(P(axis, None, None), P(axis, None, None), vec_spec),
+        out_specs=vec_spec, check_vma=False)
+    needs_pad = X.shape[0] != n_pad
+    X_pad = X
+    if needs_pad:
+        widths = ((0, n_pad - X.shape[0]),) + ((0, 0),) * (X.ndim - 1)
+        X_pad = jnp.pad(X, widths)
+    out = fn(Ap.ell_cols, Ap.ell_vals, X_pad)
+    return out[: X.shape[0]] if needs_pad else out

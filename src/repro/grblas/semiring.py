@@ -1,0 +1,111 @@
+"""Algebraic relations: semirings and the edge-semiring extension.
+
+A GraphBLAS semiring is (add-monoid, mul-op, zero, one).  ``add`` must be
+associative+commutative with identity ``zero``; ``mul`` distributes over
+``add`` with identity ``one`` and annihilator ``zero``.  These laws are
+property-tested in tests/test_grblas_properties.py.
+
+The EdgeSemiring generalizes ``mul`` to an *edge function*
+``mul(w_ij, x_j, x_i)`` so that one SpMV pass can express the graph
+p-Laplacian apply  (Delta_p x)_i = sum_j w_ij phi_p(x_i - x_j)  without
+materializing the reweighted matrix W-hat each Newton iteration.  This is
+the TPU adaptation of the paper's Algorithm 1 (see DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    """(add, mul, zero, one) over jnp scalars/arrays (elementwise)."""
+
+    add: Callable  # (a, b) -> a (+) b, associative + commutative
+    mul: Callable  # (a, b) -> a (*) b
+    zero: float    # identity of add, annihilator of mul
+    one: float     # identity of mul
+    name: str = "semiring"
+
+    def segment_reduce(self, values, segment_ids, num_segments):
+        """Reduce ``values`` per segment under the add-monoid."""
+        import jax.ops  # noqa: F401  (documentation of provenance)
+        import jax
+
+        if self.name == "reals_+x":
+            return jax.ops.segment_sum(values, segment_ids, num_segments)
+        if self.name == "min_+":
+            return jax.ops.segment_min(values, segment_ids, num_segments)
+        if self.name in ("max_x", "bool_|&"):
+            return jax.ops.segment_max(values, segment_ids, num_segments)
+        # generic fallback: sort-free fori over values would be O(nnz);
+        # all shipped rings hit a fast path above.
+        return jax.ops.segment_sum(values, segment_ids, num_segments)
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeSemiring:
+    """Semiring whose multiply sees the edge weight AND both endpoints.
+
+    mul(w, x_src, x_dst) -> contribution of edge (dst <- src).
+    The add-monoid is inherited from ``base``.
+    """
+
+    base: Semiring
+    edge_mul: Callable  # (w_ij, x_j, x_i) -> value
+    name: str = "edge_semiring"
+
+
+def _add(a, b):
+    return a + b
+
+
+def _mul(a, b):
+    return a * b
+
+
+reals_ring = Semiring(add=_add, mul=_mul, zero=0.0, one=1.0, name="reals_+x")
+min_plus_ring = Semiring(add=jnp.minimum, mul=_add, zero=jnp.inf, one=0.0, name="min_+")
+max_times_ring = Semiring(add=jnp.maximum, mul=_mul, zero=-jnp.inf, one=1.0, name="max_x")
+boolean_ring = Semiring(
+    add=jnp.logical_or, mul=jnp.logical_and, zero=False, one=True, name="bool_|&"
+)
+
+
+def phi_p(x, p, eps=0.0):
+    """phi_p(x) = |x|^{p-1} sign(x), optionally eps-smoothed for p<2.
+
+    The smoothed variant (x^2+eps)^{(p-2)/2} * x keeps the p-Laplacian
+    differentiable at x=0 (needed by Newton for p<2), matching [4].
+    """
+    if eps == 0.0:
+        return jnp.abs(x) ** (p - 1.0) * jnp.sign(x)
+    return (x * x + eps) ** ((p - 2.0) / 2.0) * x
+
+
+def plap_edge_semiring(p: float, eps: float = 1e-9) -> EdgeSemiring:
+    """Edge-semiring computing  w_ij * phi_p(x_i - x_j)  per edge."""
+
+    def edge_mul(w, x_src, x_dst):
+        return w * phi_p(x_dst - x_src, p, eps)
+
+    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul, name=f"plap_edge_p{p}")
+
+
+def plap_hess_edge_semiring(p: float, eps: float = 1e-9) -> EdgeSemiring:
+    """Edge-semiring for the matrix-free Hessian apply.
+
+    Computes  w_ij |u_i-u_j|^{p-2} (eta_i - eta_j)  where the (u, eta)
+    pair is packed as complex-free stacked input handled by ops.mxm_edge
+    with two multivectors; see core/plap.py for the call.
+    """
+
+    def edge_mul(w_and_du, eta_src, eta_dst):
+        # w_and_du is pre-fused: w_ij * |u_i - u_j|^{p-2}  (computed on the
+        # fly by the caller per edge); this closure only applies the eta
+        # difference.  Kept for API symmetry.
+        return w_and_du * (eta_dst - eta_src)
+
+    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul, name=f"plap_hess_p{p}")

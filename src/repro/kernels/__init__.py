@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel package has: <name>.py (pl.pallas_call + BlockSpec),
+ops.py (jit'd dispatching wrapper) and ref.py (pure-jnp oracle).
+All kernels are validated in interpret=True mode against their oracle
+over shape/dtype sweeps in tests/test_kernels_*.py.
+"""
+from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_ref
+from repro.kernels.plap_edge import (
+    plap_apply, plap_hvp_edge, plap_apply_ref, plap_hvp_edge_ref)
+from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
+from repro.kernels.flash_attention import flash_attention, attention_ref
+
+__all__ = [
+    "bsr_spmm", "bsr_spmm_ref", "plap_apply", "plap_hvp_edge",
+    "plap_apply_ref", "plap_hvp_edge_ref", "kmeans_assign",
+    "kmeans_assign_ref", "flash_attention", "attention_ref",
+]

@@ -1,0 +1,4 @@
+from repro.kernels.bsr_spmm.ops import bsr_spmm
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+__all__ = ["bsr_spmm", "bsr_spmm_ref"]

@@ -1,0 +1,30 @@
+"""jit'd public wrapper: dispatches SparseMatrix -> Pallas BSR kernel
+(TPU) or the jnp oracle (CPU / no-BSR fallback)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.grblas.containers import SparseMatrix
+from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_pallas
+from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+
+def bsr_spmm(A: SparseMatrix, X: jnp.ndarray, use_pallas: bool | None = None,
+             interpret: bool = False) -> jnp.ndarray:
+    """Y = A @ X using the BSR layout. X: (n, k). Returns (n, k)."""
+    assert A.bsr_blocks is not None, "build_bsr=True required"
+    bs = A.block_size
+    n_rb = len(A.bsr_indptr) - 1
+    pad_rows = n_rb * bs - X.shape[0]
+    Xp = jnp.pad(X, ((0, pad_rows), (0, 0))) if pad_rows else X
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        Y = bsr_spmm_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
+                            n_row_blocks=n_rb, block_size=bs,
+                            interpret=interpret)
+    else:
+        Y = bsr_spmm_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
+                         n_row_blocks=n_rb, block_size=bs)
+    return Y[: A.n_rows]

@@ -1,0 +1,100 @@
+"""Causal GQA flash attention (forward) — Pallas TPU kernel.
+
+Grid: (B*Hq, n_q_blocks).  Each program streams K/V blocks for one
+(block_q, D) query tile with the online-softmax recurrence, skipping
+fully-masked K blocks (causal upper triangle / outside the sliding
+window) via the grid dimension trick: the fori_loop upper bound is the
+last visible K block for this Q tile.
+
+VMEM at block_q=block_k=128, D=128: q 64 KB + k/v 128 KB + acc 64 KB +
+m/l 1 KB ~= 0.26 MB.  MXU does (128,D)x(D,128) + (128,128)x(128,D) per
+K step.  GQA: the q-head -> kv-head map happens in the BlockSpec
+index_map (h // group), so no K/V repeat is materialized.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(group, scale, causal, window, block_q, block_k, seq_k,
+            q_ref, k_ref, v_ref, o_ref):
+    qb = pl.program_id(1)
+    q = q_ref[0]                                     # (bq, D)
+    D = q.shape[-1]
+
+    q_start = qb * block_q
+    n_kb = seq_k // block_k
+    if causal:
+        last_kb = jnp.minimum((q_start + block_q - 1) // block_k + 1, n_kb)
+    else:
+        last_kb = n_kb
+    if window is not None:
+        first_kb = jnp.maximum((q_start - window) // block_k, 0)
+    else:
+        first_kb = 0
+
+    def body(kb, carry):
+        acc, m_i, l_i = carry
+        k = k_ref[0, pl.ds(kb * block_k, block_k), :]
+        v = v_ref[0, pl.ds(kb * block_k, block_k), :]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ki = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= ki <= qi
+        if window is not None:
+            mask &= ki > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = jnp.maximum(m_i, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_i - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_new = l_i * alpha + jnp.sum(p, axis=1)
+        acc = acc * alpha[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, D), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    acc, m_i, l_i = jax.lax.fori_loop(first_kb, last_kb, body, (acc0, m0, l0))
+    o_ref[0] = (acc / jnp.maximum(l_i, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "block_q", "block_k", "interpret"))
+def flash_attention_pallas(q, k, v, causal=True, window=None,
+                           block_q=128, block_k=128, interpret=False):
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    grid = (B * Hq, Sq // block_q)
+
+    q_spec = pl.BlockSpec((1, block_q, D),
+                          lambda bh, qb: (bh, qb, 0))
+    kv_spec = pl.BlockSpec((1, Sk, D),
+                           lambda bh, qb: (bh // group, 0, 0))
+    o_spec = pl.BlockSpec((1, block_q, D), lambda bh, qb: (bh, qb, 0))
+
+    qf = q.reshape(B * Hq, Sq, D)
+    kf = k.reshape(B * Hkv, Sk, D)
+    vf = v.reshape(B * Hkv, Sk, D)
+    out = pl.pallas_call(
+        functools.partial(_kernel, group, scale, causal, window,
+                          block_q, block_k, Sk),
+        grid=grid,
+        in_specs=[q_spec, kv_spec, kv_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, D), q.dtype),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, D)

@@ -1,0 +1,46 @@
+"""Public attention entry point: Pallas flash kernel on TPU, jnp ref
+elsewhere.  Differentiable everywhere: the Pallas forward is wrapped in
+jax.custom_vjp whose backward recomputes with the jnp reference
+(flash-style recompute; exact same math, so gradients match the ref)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+from repro.kernels.flash_attention.ref import attention_ref, attention_ref_chunked
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash(q, k, v, causal, window, interpret):
+    return flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                  interpret=interpret)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    return _flash(q, k, v, causal, window, interpret), (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: attention_ref(q, k, v, causal, window),
+                     q, k, v)
+    return vjp(g)
+
+
+_flash.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int | None = None,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    """q: (B,Hq,S,D), k/v: (B,Hkv,S,D) -> (B,Hq,S,D)."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return _flash(q, k, v, causal, window, interpret)
+    # jnp path: q-chunked flash (bounded memory) once S is non-trivial
+    if q.shape[2] > 1024:
+        return attention_ref_chunked(q, k, v, causal=causal, window=window)
+    return attention_ref(q, k, v, causal=causal, window=window)

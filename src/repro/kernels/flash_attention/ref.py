@@ -1,0 +1,77 @@
+"""jnp oracle: causal (optionally sliding-window) GQA attention.
+
+Two implementations:
+  attention_ref         — materializes (Sq,Sk) scores; oracle for tests.
+  attention_ref_chunked — lax.scan over query chunks with a remat'd
+    body: peak memory O(q_chunk * Sk) instead of O(Sq * Sk).  This is
+    what the model stack lowers on non-TPU backends (and what the
+    dry-run memory analysis reflects); on TPU the Pallas flash kernel
+    replaces it.  Exact same math — pinned by tests.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, causal: bool = True, window: int | None = None):
+    """q: (B, Hq, S, D), k/v: (B, Hkv, S, D); Hq % Hkv == 0.
+    Returns (B, Hq, S, D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    group = Hq // Hkv
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(D).astype(q.dtype)
+    qi = jnp.arange(Sq)[:, None]
+    ki = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    w = jnp.nan_to_num(jnp.exp(scores - jnp.max(scores, -1, keepdims=True)))
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", w.astype(v.dtype), vv)
+
+
+def attention_ref_chunked(q, k, v, causal: bool = True,
+                          window: int | None = None, q_chunk: int = 512):
+    """Query-chunked attention: scan over q blocks, remat'd body."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]                  # MLA: value dim != qk dim
+    group = Hq // Hkv
+    nc = max(Sq // q_chunk, 1)
+    qc = Sq // nc
+    scale = 1.0 / jnp.sqrt(D).astype(q.dtype)
+
+    kk = k.reshape(B, Hkv, 1, Sk, D)
+    vv = v.reshape(B, Hkv, 1, Sk, Dv)
+    qs = q.reshape(B, Hkv, group, nc, qc, D).transpose(3, 0, 1, 2, 4, 5)
+
+    ki = jnp.arange(Sk)
+
+    @jax.checkpoint
+    def body(_, inp):
+        qi_blk, q_blk = inp                       # (B,Hkv,g,qc,D)
+        s = jnp.einsum("bhgqd,bhzkd->bhgqk", q_blk, kk) * scale
+        qi = qi_blk[:, None]                      # (qc,1)
+        mask = jnp.ones((qc, Sk), bool)
+        if causal:
+            mask &= ki[None, :] <= qi
+        if window is not None:
+            mask &= ki[None, :] > qi - window
+        s = jnp.where(mask[None, None, None], s.astype(jnp.float32), -1e30)
+        p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+        o = jnp.einsum("bhgqk,bhzkd->bhgqd", p, vv)
+        return None, o
+
+    qi_all = jnp.arange(Sq).reshape(nc, qc)
+    _, out = jax.lax.scan(body, None, (qi_all, qs))
+    # (nc,B,Hkv,g,qc,Dv) -> (B,Hq,Sq,Dv)
+    out = out.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hq, Sq, Dv)
+    return out

@@ -1,0 +1,61 @@
+"""Fused distance + argmin kmeans-assignment Pallas kernel.
+
+Grid over row tiles of X; centroids (kc <= 128, padded to a lane
+multiple) stay VMEM-resident across all grid steps (constant index_map).
+Per step: one (bm, d) x (d, kc) MXU matmul + VPU argmin via the
+iota/min-select idiom (TPU has no native argmin over lanes).
+
+Outputs are (bm, 1)-shaped tiles (TPU wants >=2D); the wrapper squeezes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, cc_ref, lab_ref, dist_ref):
+    x = x_ref[...]                                    # (bm, d)
+    c = c_ref[...]                                    # (kc, d)
+    cc = cc_ref[...]                                  # (1, kc) |c|^2
+    xx = jnp.sum(x * x, axis=1, keepdims=True)        # (bm, 1)
+    d2 = xx + cc - 2.0 * jnp.dot(x, c.T, preferred_element_type=jnp.float32)
+    d2 = jnp.maximum(d2, 0.0)
+    dmin = jnp.min(d2, axis=1, keepdims=True)         # (bm,1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, d2.shape, 1)
+    big = jnp.iinfo(jnp.int32).max
+    lab = jnp.min(jnp.where(d2 <= dmin, iota, big), axis=1, keepdims=True)
+    lab_ref[...] = lab.astype(jnp.int32)
+    dist_ref[...] = dmin
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def kmeans_assign_pallas(X: jnp.ndarray, C: jnp.ndarray,
+                         block_m: int = 256, interpret: bool = False):
+    n, d = X.shape
+    kc = C.shape[0]
+    pad = (-n) % block_m
+    Xp = jnp.pad(X, ((0, pad), (0, 0)))
+    cc = jnp.sum(C * C, axis=1)[None, :]              # (1, kc)
+    grid = (Xp.shape[0] // block_m,)
+    lab, dist = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, d), lambda i: (i, 0)),
+            pl.BlockSpec((kc, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, kc), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Xp.shape[0], 1), jnp.int32),
+            jax.ShapeDtypeStruct((Xp.shape[0], 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(Xp, C, cc)
+    return lab[:n, 0], dist[:n, 0]

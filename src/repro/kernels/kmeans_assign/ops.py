@@ -1,0 +1,17 @@
+"""Public wrapper for the fused kmeans assignment."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.kmeans_assign.kmeans_assign import kmeans_assign_pallas
+from repro.kernels.kmeans_assign.ref import kmeans_assign_ref
+
+
+def kmeans_assign(X, C, use_pallas: bool | None = None,
+                  interpret: bool = False, block_m: int = 256):
+    """(labels (n,), min_sqdist (n,))."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    if use_pallas or interpret:
+        return kmeans_assign_pallas(X, C, block_m=block_m, interpret=interpret)
+    return kmeans_assign_ref(X, C)

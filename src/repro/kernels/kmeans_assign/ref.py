@@ -1,0 +1,12 @@
+"""jnp oracle for the fused distance+argmin kmeans assignment."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def kmeans_assign_ref(X: jnp.ndarray, C: jnp.ndarray):
+    """Returns (labels int32 (n,), min_sqdist (n,))."""
+    xx = jnp.sum(X * X, axis=1, keepdims=True)
+    cc = jnp.sum(C * C, axis=1)[None, :]
+    d2 = jnp.maximum(xx + cc - 2.0 * (X @ C.T), 0.0)
+    return jnp.argmin(d2, axis=1).astype(jnp.int32), jnp.min(d2, axis=1)

@@ -1,0 +1,4 @@
+from repro.kernels.plap_edge.ops import plap_apply, plap_hvp_edge
+from repro.kernels.plap_edge.ref import plap_apply_ref, plap_hvp_edge_ref
+
+__all__ = ["plap_apply", "plap_hvp_edge", "plap_apply_ref", "plap_hvp_edge_ref"]

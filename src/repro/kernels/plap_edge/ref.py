@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the fused p-Laplacian edge-semiring kernels.
+
+Operates on the same BSR tile layout as the Pallas kernel so the two are
+bit-comparable: dense (bs,bs) weight tiles, multivector X (n,k).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import phi as PHI
+
+
+def plap_apply_ref(blocks, indices, row_ids, X, n_row_blocks,
+                   block_size=128, p=1.5, eps=1e-9):
+    """(Delta_p X)_i = sum_j w_ij phi_p(x_i - x_j), per column of X."""
+    bs = block_size
+    Xb = X.reshape(-1, bs, X.shape[1])
+    x_cols = Xb[indices]                     # (nb, bs, k)   x_j
+    x_rows = Xb[row_ids]                     # (nb, bs, k)   x_i
+    diff = x_rows[:, :, None, :] - x_cols[:, None, :, :]   # (nb,bs,bs,k)
+    contrib = blocks[..., None] * PHI.phi(diff, p, eps)
+    tile_out = jnp.sum(contrib, axis=2)                    # (nb, bs, k)
+    out = jnp.zeros((n_row_blocks, bs, X.shape[1]), X.dtype)
+    out = out.at[row_ids].add(tile_out)
+    return out.reshape(n_row_blocks * bs, -1)
+
+
+def plap_hvp_edge_ref(blocks, indices, row_ids, U, Eta, n_row_blocks,
+                      block_size=128, p=1.5, eps=1e-9):
+    """HessA-part apply: sum_j w_ij phi'(u_i-u_j) (eta_i - eta_j)."""
+    bs = block_size
+    Ub = U.reshape(-1, bs, U.shape[1])
+    Eb = Eta.reshape(-1, bs, Eta.shape[1])
+    du = Ub[row_ids][:, :, None, :] - Ub[indices][:, None, :, :]
+    de = Eb[row_ids][:, :, None, :] - Eb[indices][:, None, :, :]
+    contrib = blocks[..., None] * PHI.phi_prime(du, p, eps) * de
+    tile_out = jnp.sum(contrib, axis=2)
+    out = jnp.zeros((n_row_blocks, bs, U.shape[1]), U.dtype)
+    out = out.at[row_ids].add(tile_out)
+    return out.reshape(n_row_blocks * bs, -1)

@@ -1,0 +1,1 @@
+# launch: mesh construction, dry-run driver, train/serve entry points.

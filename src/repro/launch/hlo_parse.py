@@ -1,0 +1,268 @@
+"""Structural HLO parser: per-device FLOPs / dot-bytes / collective wire
+bytes with while-loop (lax.scan) trip-count multipliers.
+
+Why not compiled.cost_analysis()?  XLA's analysis counts each while body
+ONCE, so an L-layer scanned transformer under-reports by ~L x.  This
+parser walks the computation call graph (entry -> fusions/calls/whiles),
+multiplies while bodies by their trip counts (parsed from the loop
+condition's comparison constant), and sums:
+
+  * dot FLOPs:  2 * prod(result_shape) * contracted_size
+  * dot HBM bytes: lhs + rhs + out  (first-order TPU model: every large
+    matmul round-trips HBM; elementwise ops ride fused into them)
+  * collective wire bytes per device, ring model (see hlo_analysis)
+
+Shapes in the post-partitioning module are per-device, so all outputs
+are per-device numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([\w\[\],\s]*?)\s*"
+                     r"([\w\-]+)\(")
+_SHAPE_ONE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_OPERANDS_RE = re.compile(r"\(([^()]*(?:\([^()]*\)[^()]*)*)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_BATCH_RE = re.compile(r"lhs_batch_dims=\{([\d,]*)\}")
+_CALL_REFS_RE = re.compile(
+    r"(?:calls=|to_apply=|condition=|body=)%?([\w.\-]+)")
+_BODY_REF_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_REF_RE = re.compile(r"condition=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems_bytes(shape_str: str):
+    total_b = 0
+    total_e = 0
+    for m in _SHAPE_ONE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total_e += n
+        total_b += n * _DTYPE_BYTES[dt]
+    return total_e, total_b
+
+
+def _parse_dims(shape_str: str):
+    m = _SHAPE_ONE_RE.search(shape_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class CompStats:
+    flops: float = 0.0
+    dot_bytes: float = 0.0
+    wire: float = 0.0
+    wire_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    # (callee, kind): kind "while" carries trips via cond lookup
+    calls: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> Dict[str, list]:
+    comps: Dict[str, list] = {}
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        h = _HDR_RE.match(line)
+        if h and line.rstrip().endswith("{"):
+            cur = h.group(2)
+            comps[cur] = []
+            continue
+        if cur is not None:
+            if line.startswith("}"):
+                cur = None
+                continue
+            comps[cur].append(line)
+    return comps
+
+
+def _cond_trips(comp_lines) -> int:
+    """Trip count from the loop condition: the comparison constant."""
+    consts = []
+    for line in comp_lines:
+        for c in _CONST_RE.finditer(line):
+            consts.append(int(c.group(1)))
+    return max(consts) if consts else 1
+
+
+class HloProgram:
+    def __init__(self, text: str, default_group: int = 16,
+                 native_cap_bytes: Optional[int] = None):
+        """native_cap_bytes: cap the per-element width of collective
+        payloads (TPU-native estimate).  The CPU backend promotes all
+        bf16 compute to f32, so the lowered module shows f32 collectives
+        that a TPU build keeps in bf16; capping at the model's widest
+        declared dtype (2 for bf16-param models) undoes that promotion
+        without crediting precision we never declared."""
+        self.comps = _split_computations(text)
+        self.default_group = default_group
+        self.native_cap = native_cap_bytes
+        self.stats: Dict[str, CompStats] = {}
+        self.trips: Dict[str, int] = {}
+        for name, lines in self.comps.items():
+            self.stats[name] = self._analyze(name, lines)
+        self.entry = self._find_entry(text)
+
+    def _find_entry(self, text) -> str:
+        for line in text.splitlines():
+            if line.startswith("ENTRY"):
+                m = _HDR_RE.match(line)
+                if m:
+                    return m.group(2)
+        return next(iter(self.comps), "")
+
+    # ------------------------------------------------------------- core
+    def _analyze(self, name, lines) -> CompStats:
+        st = CompStats()
+        shapes: Dict[str, str] = {}
+        # pass 1: symbol table (including params)
+        for line in lines:
+            m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*([^=]+?)\s+[\w\-]+\(", line)
+            if m:
+                shapes[m.group(1)] = m.group(2)
+        for line in lines:
+            m = re.match(r"\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)", line)
+            if not m:
+                continue
+            res_name, res_shape, op, rest = m.groups()
+            base_op = op
+            if base_op.endswith("-start") or base_op.endswith("-done"):
+                base_op = base_op.rsplit("-", 1)[0]
+            if base_op == "dot":
+                self._dot(st, res_shape, rest, shapes)
+            elif base_op in _COLL_KINDS and not op.endswith("-done"):
+                self._collective(st, base_op, res_shape, line)
+            elif base_op == "while":
+                b = _BODY_REF_RE.search(line)
+                c = _COND_REF_RE.search(line)
+                if b:
+                    trips = 1
+                    if c and c.group(1) in self.comps:
+                        trips = _cond_trips(self.comps[c.group(1)])
+                    st.calls.append((b.group(1), trips))
+            elif base_op in ("fusion", "call", "map", "reduce", "sort",
+                             "reduce-window", "scatter", "select-and-scatter",
+                             "custom-call", "conditional"):
+                for ref in _CALL_REFS_RE.finditer(line):
+                    st.calls.append((ref.group(1), 1))
+        return st
+
+    def _dot(self, st, res_shape, rest, shapes):
+        res_dims = _parse_dims(res_shape)
+        if res_dims is None:
+            return
+        # operand names
+        ops = re.findall(r"%([\w.\-]+)", rest.split("),")[0])
+        lhs_shape = shapes.get(ops[0]) if ops else None
+        contracted = 1
+        if lhs_shape is not None:
+            lhs_dims = _parse_dims(lhs_shape)
+            cm = _CONTRACT_RE.search(rest)
+            if lhs_dims and cm and cm.group(1):
+                for i in cm.group(1).split(","):
+                    idx = int(i)
+                    if idx < len(lhs_dims):
+                        contracted *= lhs_dims[idx]
+        out_elems, out_bytes = _shape_elems_bytes(res_shape)
+        st.flops += 2.0 * out_elems * contracted
+        in_bytes = 0
+        for o in ops[:2]:
+            if o in shapes:
+                in_bytes += _shape_elems_bytes(shapes[o])[1]
+        st.dot_bytes += out_bytes + in_bytes
+
+    def _collective(self, st, kind, res_shape, line):
+        out_elems, out_bytes = _shape_elems_bytes(res_shape)
+        if self.native_cap is not None and out_elems:
+            width = out_bytes / out_elems
+            out_bytes = out_elems * min(width, self.native_cap)
+        g = self.default_group
+        gm = _GROUPS_IOTA_RE.search(line)
+        if gm:
+            g = int(gm.group(2))
+        else:
+            gm = _GROUPS_LIST_RE.search(line)
+            if gm:
+                g = gm.group(1).count(",") + 1
+        g = max(g, 2)
+        f = (g - 1) / g
+        if kind == "all-gather":
+            wire = out_bytes * f
+        elif kind == "all-reduce":
+            wire = 2.0 * out_bytes * f
+        elif kind == "reduce-scatter":
+            wire = out_bytes * (g - 1)
+        elif kind == "all-to-all":
+            wire = out_bytes * f
+        else:
+            wire = out_bytes
+        st.wire += wire
+        st.wire_by_kind[kind] = st.wire_by_kind.get(kind, 0.0) + wire
+        st.coll_counts[kind] = st.coll_counts.get(kind, 0) + 1
+
+    # ----------------------------------------------------------- totals
+    def totals(self):
+        memo: Dict[str, tuple] = {}
+
+        def walk(name, depth=0):
+            if name in memo:
+                return memo[name]
+            if name not in self.stats or depth > 64:
+                return (0.0, 0.0, 0.0, {}, {})
+            st = self.stats[name]
+            memo[name] = (st.flops, st.dot_bytes, st.wire,
+                          dict(st.wire_by_kind), dict(st.coll_counts))
+            f, b, w = st.flops, st.dot_bytes, st.wire
+            wk = dict(st.wire_by_kind)
+            cc = dict(st.coll_counts)
+            for callee, mult in st.calls:
+                cf, cb, cw, cwk, ccc = walk(callee, depth + 1)
+                f += cf * mult
+                b += cb * mult
+                w += cw * mult
+                for k, v in cwk.items():
+                    wk[k] = wk.get(k, 0.0) + v * mult
+                for k, v in ccc.items():
+                    cc[k] = cc.get(k, 0) + v * mult
+            memo[name] = (f, b, w, wk, cc)
+            return memo[name]
+
+        return walk(self.entry)
+
+
+def analyze_hlo(text: str, default_group: int = 16,
+                native_cap_bytes: Optional[int] = None):
+    """Returns dict with per-device flops, dot_bytes, wire_bytes.
+    wire_bytes_raw is always the as-lowered (CPU-promoted) number;
+    wire_bytes applies the native dtype cap when given."""
+    raw = HloProgram(text, default_group).totals()
+    if native_cap_bytes is None:
+        f, b, w, wk, cc = raw
+        return {"flops": f, "dot_bytes": b, "wire_bytes": w,
+                "wire_bytes_raw": w, "wire_by_kind": wk, "coll_counts": cc}
+    f, b, w, wk, cc = HloProgram(text, default_group,
+                                 native_cap_bytes).totals()
+    return {"flops": f, "dot_bytes": b, "wire_bytes": w,
+            "wire_bytes_raw": raw[2], "wire_by_kind": wk, "coll_counts": cc}

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module
+never touches jax device state — required because the dry-run must set
+XLA_FLAGS before any jax initialization.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """v5e pod mesh: 16x16 = 256 chips per pod; 2 pods = 512 chips.
+
+    Axes: ``data`` carries DP/FSDP, ``model`` carries TP/EP/SP, ``pod``
+    (multi-pod only) carries pure DP — only gradient reduction crosses
+    the inter-pod DCI links.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n // model, model), ("data", "model"))

@@ -1,0 +1,68 @@
+"""The assigned input-shape grid and per-cell input_specs().
+
+Every (arch x shape) pair — 40 cells — is defined here, including the
+documented skips (long_500k for pure full-attention archs, per the
+assignment; recorded as status="skip" with the reason).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.data.tokens import batch_specs
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_status(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    """None if runnable, else the documented skip reason."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return ("skip: full quadratic attention at 524288-token decode "
+                "(assignment: run long-context only for SSM/hybrid/SWA)")
+    if shape.kind == "decode" and not cfg.has_decoder:
+        return "skip: encoder-only architecture has no decode step"
+    return None
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, compute_dtype=None):
+    """ShapeDtypeStruct stand-ins for every model input of this cell —
+    weak-type-correct, shardable, no device allocation."""
+    cd = jnp.dtype(compute_dtype or cfg.compute_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_specs(cfg, B, S, cd)}
+    if shape.kind == "prefill":
+        out = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        if cfg.family == "encdec":
+            out["enc_frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.enc_seq, cfg.d_model), cd)
+        if cfg.family == "vlm":
+            out["extra_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.vis_seq, cfg.d_model), cd)
+        return out
+    # decode: one new token against a seq_len-deep cache
+    from repro.models import model as M
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "cache": M.cache_abstract(cfg, B, S, cd),
+    }
+    return out

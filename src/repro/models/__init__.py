@@ -1,0 +1,5 @@
+from repro.models.config import ArchConfig, MoEConfig, MLAConfig, SSMConfig
+from repro.models import model, layers, attention, moe, mamba2
+
+__all__ = ["ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig",
+           "model", "layers", "attention", "moe", "mamba2"]

@@ -1,0 +1,253 @@
+"""Attention variants: GQA/MQA (RoPE, optional sliding window), and
+DeepSeek-style MLA (multi-head latent attention) with an absorbed
+latent-cache decode path.
+
+Decode KV caches are sequence-sharded over the ``model`` axis
+(logical "cache_seq"); the softmax over the sharded axis is expressed
+as plain jnp reductions, which GSPMD turns into the flash-decoding
+partial-max/sum all-reduce pattern.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import PAb
+from repro.dist.sharding import constrain
+from repro.kernels.flash_attention import flash_attention
+
+
+# ------------------------------------------------------------- GQA / MQA
+
+def gqa_ab(cfg: ArchConfig):
+    d, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    s = d ** -0.5
+    return {
+        "wq": PAb((d, H, hd), ("embed", "heads", None), "normal", s),
+        "wk": PAb((d, Hkv, hd), ("embed", "kv", None), "normal", s),
+        "wv": PAb((d, Hkv, hd), ("embed", "kv", None), "normal", s),
+        "wo": PAb((H, hd, d), ("heads", None, "embed"), "normal",
+                  (H * hd) ** -0.5),
+    }
+
+
+def gqa_train(cfg: ArchConfig, params, x, positions, mesh=None,
+              causal: bool = True, kv_override=None, return_kv: bool = False):
+    """Full-sequence attention (train / prefill). x: (B,S,D)."""
+    B, S, D = x.shape
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(cd))
+    kv_src = x if kv_override is None else kv_override
+    k = jnp.einsum("bsd,dhk->bhsk", kv_src, params["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bhsk", kv_src, params["wv"].astype(cd))
+    if kv_override is None:  # self-attention: rotate q and k
+        q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = L.apply_rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if mesh is not None:
+        # TP over heads when they divide the model axis; otherwise spread
+        # the batch over model too (else attention replicates per device
+        # and its quadratic buffers dominate the memory term — §Perf E1b)
+        shardable = cfg.n_heads % mesh.shape.get("model", 1) == 0
+        bax = "batch" if shardable else "attn_batch"
+        q = constrain(q, mesh, (bax, "heads", "seq", None))
+        k = constrain(k, mesh, (bax, "kv", "seq", None))
+        v = constrain(v, mesh, (bax, "kv", "seq", None))
+    out = flash_attention(q, k, v, causal=causal, window=cfg.window,
+                          use_pallas=False)
+    proj = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(cd))
+    if mesh is not None:
+        proj = constrain(proj, mesh, ("batch", "seq", None))
+    if return_kv:
+        return proj, (k, v)
+    return proj
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray   # (B, Hkv, Smax, hd)
+    v: jnp.ndarray
+
+
+def gqa_init_cache(cfg: ArchConfig, batch, max_len, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.n_kv_heads, max_len, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def gqa_cache_abstract(cfg: ArchConfig, batch, max_len, dtype):
+    hd = cfg.resolved_head_dim
+    shape = (batch, cfg.n_kv_heads, max_len, hd)
+    sd = jax.ShapeDtypeStruct(shape, dtype)
+    return KVCache(k=sd, v=sd)
+
+
+def gqa_cache_logical(cfg: ArchConfig):
+    # shard kv heads over model when divisible; else shard the sequence
+    # (flash-decoding style partial softmax — GSPMD inserts the combine)
+    if cfg.n_kv_heads >= 16:
+        ls = ("cache_batch", "kv", None, None)
+    else:
+        ls = ("cache_batch", None, "cache_seq", None)
+    return KVCache(k=ls, v=ls)
+
+
+def gqa_decode(cfg: ArchConfig, params, x, cache: KVCache, positions,
+               mesh=None):
+    """One-token decode. x: (B,1,D); positions: (B,1) absolute position."""
+    B = x.shape[0]
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"].astype(cd))
+    k_new = jnp.einsum("bsd,dhk->bhsk", x, params["wk"].astype(cd))
+    v_new = jnp.einsum("bsd,dhk->bhsk", x, params["wv"].astype(cd))
+    q = L.apply_rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+    k_new = L.apply_rope(k_new, positions, cfg.rope_theta, cfg.rope_fraction)
+
+    # scatter the new kv at ``positions`` (same for all batch rows in this
+    # framework: positions (B,1) with identical values per step)
+    pos = positions[0, 0]
+    z = jnp.zeros((), pos.dtype)
+    k = jax.lax.dynamic_update_slice(
+        cache.k, k_new.astype(cache.k.dtype), (z, z, pos, z))
+    v = jax.lax.dynamic_update_slice(
+        cache.v, v_new.astype(cache.v.dtype), (z, z, pos, z))
+
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    group = Hq // Hkv
+    hd = cfg.resolved_head_dim
+    Smax = k.shape[2]
+    qg = q.reshape(B, Hkv, group, hd)
+    scores = jnp.einsum("bhgk,bhsk->bhgs", qg,
+                        k.astype(cd)) / jnp.sqrt(hd).astype(cd)
+    idx = jnp.arange(Smax)
+    mask = idx[None, :] <= pos
+    if cfg.window is not None:
+        mask &= idx[None, :] > pos - cfg.window
+    scores = jnp.where(mask[None, None], scores.astype(jnp.float32), -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+    out = jnp.einsum("bhgs,bhsk->bhgk", w, v.astype(cd))
+    out = out.reshape(B, Hq, 1, hd).swapaxes(1, 2)  # (B,1,H,hd)
+    proj = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(cd))
+    return proj, KVCache(k=k, v=v)
+
+
+# ---------------------------------------------------------------- MLA
+
+def mla_ab(cfg: ArchConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    s = d ** -0.5
+    return {
+        "wq_a": PAb((d, m.q_lora_rank), ("embed", "latent"), "normal", s),
+        "q_norm": L.rmsnorm_ab(m.q_lora_rank),
+        "wq_b": PAb((m.q_lora_rank, H, m.nope_dim + m.rope_dim),
+                    ("latent", "heads", None), "normal", m.q_lora_rank ** -0.5),
+        "wkv_a": PAb((d, m.kv_lora_rank + m.rope_dim), ("embed", "latent"),
+                     "normal", s),
+        "kv_norm": L.rmsnorm_ab(m.kv_lora_rank),
+        "wk_b": PAb((m.kv_lora_rank, H, m.nope_dim), ("latent", "heads", None),
+                    "normal", m.kv_lora_rank ** -0.5),
+        "wv_b": PAb((m.kv_lora_rank, H, m.v_dim), ("latent", "heads", None),
+                    "normal", m.kv_lora_rank ** -0.5),
+        "wo": PAb((H, m.v_dim, d), ("heads", None, "embed"), "normal",
+                  (H * m.v_dim) ** -0.5),
+    }
+
+
+def _mla_qk(cfg, params, x, positions):
+    """Shared q / latent projections. Returns q_nope, q_rope, c_kv, k_rope."""
+    m = cfg.mla
+    cd = x.dtype
+    ql = L.rmsnorm(params["q_norm"], x @ params["wq_a"].astype(cd),
+                   cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bhsk", ql, params["wq_b"].astype(cd))
+    q_nope, q_rope = q[..., : m.nope_dim], q[..., m.nope_dim:]
+    q_rope = L.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = x @ params["wkv_a"].astype(cd)                  # (B,S,rank+rope)
+    c_kv = L.rmsnorm(params["kv_norm"], kv[..., : m.kv_lora_rank],
+                     cfg.norm_eps)
+    k_rope = kv[..., m.kv_lora_rank:][:, None]           # (B,1,S,rope)
+    k_rope = L.apply_rope(k_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_train(cfg: ArchConfig, params, x, positions, mesh=None,
+              return_latent: bool = False):
+    """Full-sequence MLA (train / prefill): expand k,v from the latent."""
+    m = cfg.mla
+    cd = x.dtype
+    q_nope, q_rope, c_kv, k_rope = _mla_qk(cfg, params, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wk_b"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bhsk", c_kv, params["wv_b"].astype(cd))
+    k_rope_b = jnp.broadcast_to(
+        k_rope, (*k_nope.shape[:-1], m.rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    if mesh is not None:
+        q = constrain(q, mesh, ("batch", "heads", "seq", None))
+        k = constrain(k, mesh, ("batch", "heads", "seq", None))
+        v = constrain(v, mesh, ("batch", "heads", "seq", None))
+    out = flash_attention(q, k, v, causal=True, use_pallas=False)
+    proj = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(cd))
+    if return_latent:
+        return proj, (c_kv, k_rope[:, 0])       # (B,S,rank), (B,S,rope)
+    return proj
+
+
+class MLACache(NamedTuple):
+    c_kv: jnp.ndarray    # (B, Smax, kv_lora_rank)
+    k_rope: jnp.ndarray  # (B, Smax, rope_dim)
+
+
+def mla_init_cache(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return MLACache(c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                    k_rope=jnp.zeros((batch, max_len, m.rope_dim), dtype))
+
+
+def mla_cache_abstract(cfg, batch, max_len, dtype):
+    m = cfg.mla
+    return MLACache(
+        c_kv=jax.ShapeDtypeStruct((batch, max_len, m.kv_lora_rank), dtype),
+        k_rope=jax.ShapeDtypeStruct((batch, max_len, m.rope_dim), dtype))
+
+
+def mla_cache_logical(cfg):
+    # the latent cache has no head dim: shard the sequence over model
+    return MLACache(c_kv=("cache_batch", "cache_seq", None),
+                    k_rope=("cache_batch", "cache_seq", None))
+
+
+def mla_decode(cfg: ArchConfig, params, x, cache: MLACache, positions,
+               mesh=None):
+    """Absorbed-matmul decode: scores computed against the latent cache
+    directly (q~ = q_nope @ W_kb per head), so per step the cache read is
+    O(S * (rank + rope)) instead of O(S * H * head_dim)."""
+    m = cfg.mla
+    B = x.shape[0]
+    cd = x.dtype
+    q_nope, q_rope, c_new, kr_new = _mla_qk(cfg, params, x, positions)
+    pos = positions[0, 0]
+    z = jnp.zeros((), pos.dtype)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache.c_kv, c_new.astype(cache.c_kv.dtype), (z, pos, z))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache.k_rope, kr_new[:, 0].astype(cache.k_rope.dtype), (z, pos, z))
+
+    # absorb: q~_h = q_nope_h @ W_kb_h^T  -> (B,H,1,rank)
+    q_lat = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["wk_b"].astype(cd))
+    s_nope = jnp.einsum("bhsr,btr->bhst", q_lat, c_kv.astype(cd))
+    s_rope = jnp.einsum("bhsk,btk->bhst", q_rope, k_rope.astype(cd))
+    scale = 1.0 / jnp.sqrt(m.nope_dim + m.rope_dim).astype(jnp.float32)
+    scores = (s_nope + s_rope).astype(jnp.float32) * scale
+    idx = jnp.arange(c_kv.shape[1])
+    scores = jnp.where((idx <= pos)[None, None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cd)
+    # attend in latent space, then expand once: (B,H,1,rank) @ W_vb
+    o_lat = jnp.einsum("bhst,btr->bhsr", w, c_kv.astype(cd))
+    out = jnp.einsum("bhsr,rhk->bhsk", o_lat, params["wv_b"].astype(cd))
+    proj = jnp.einsum("bhsk,hkd->bsd", out, params["wo"].astype(cd))
+    return proj, MLACache(c_kv=c_kv, k_rope=k_rope)

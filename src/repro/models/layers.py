@@ -1,0 +1,214 @@
+"""Shared layers for the LM stack: abstract params, norms, RoPE, MLPs,
+embeddings, chunked cross-entropy.
+
+Parameter system: every layer declares an *abstract* tree of
+``PAb(shape, logical, init, scale)``.  From one abstract tree we derive
+  * materialized params   (init_tree)      — training
+  * PartitionSpecs        (spec_tree)      — GSPMD in/out shardings
+  * ShapeDtypeStructs     (shape_tree)     — the dry-run (no allocation)
+so sharding and shapes can never drift apart.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import (logical_to_mesh, resolve_spec, AxisRules,
+                                 DEFAULT_RULES)
+
+
+class PAb(NamedTuple):
+    shape: tuple
+    logical: tuple
+    init: str = "normal"      # normal | zeros | ones
+    scale: float = 1.0
+
+
+def is_pab(x):
+    return isinstance(x, PAb)
+
+
+def init_tree(tree, key, dtype):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_pab)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, ab in zip(keys, leaves):
+        if ab.init == "zeros":
+            out.append(jnp.zeros(ab.shape, dtype))
+        elif ab.init == "ones":
+            out.append(jnp.ones(ab.shape, dtype))
+        else:
+            out.append(ab.scale * jax.random.normal(k, ab.shape, dtype))
+    return jax.tree.unflatten(treedef, out)
+
+
+def spec_tree(tree, mesh, rules: AxisRules = None):
+    from repro.dist.sharding import active_rules
+    rules = rules or active_rules()
+    return jax.tree.map(
+        lambda ab: jax.sharding.NamedSharding(
+            mesh, resolve_spec(ab.shape, ab.logical, mesh, rules)),
+        tree, is_leaf=is_pab)
+
+
+def pspec_tree(tree, mesh, rules: AxisRules = None):
+    from repro.dist.sharding import active_rules
+    rules = rules or active_rules()
+    return jax.tree.map(
+        lambda ab: resolve_spec(ab.shape, ab.logical, mesh, rules),
+        tree, is_leaf=is_pab)
+
+
+def shape_tree(tree, dtype):
+    return jax.tree.map(
+        lambda ab: jax.ShapeDtypeStruct(ab.shape, dtype),
+        tree, is_leaf=is_pab)
+
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(ab.shape))
+               for ab in jax.tree.leaves(tree, is_leaf=is_pab))
+
+
+# ------------------------------------------------------------------ norms
+
+def rmsnorm_ab(d):
+    return {"scale": PAb((d,), ("embed",), "ones")}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return out * params["scale"].astype(x.dtype)
+
+
+def layernorm_ab(d):
+    return {"scale": PAb((d,), ("embed",), "ones"),
+            "bias": PAb((d,), ("embed",), "zeros")}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    return out * params["scale"].astype(x.dtype) + params["bias"].astype(x.dtype)
+
+
+# ------------------------------------------------------------------- RoPE
+
+def rope_angles(positions, dim, theta=10000.0):
+    """positions (...,) -> (cos, sin) of shape (..., dim//2)."""
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, theta=10000.0, fraction=1.0):
+    """x: (B, H, S, D); rotate the first ``fraction`` of D (interleaved
+    halves convention).  fraction=0.5 gives chatglm3's 2d-RoPE layout."""
+    D = x.shape[-1]
+    rot = int(D * fraction)
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = rope_angles(positions, rot, theta)          # (B,S,rot/2)
+    cos = cos[:, None, :, :]
+    sin = sin[:, None, :, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    rotated = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([rotated.astype(x.dtype), xp], axis=-1)
+
+
+# -------------------------------------------------------------------- MLP
+
+def mlp_ab(d, f, gated=True):
+    s_in = d ** -0.5
+    s_out = f ** -0.5
+    p = {"up": PAb((d, f), ("embed", "mlp"), "normal", s_in),
+         "down": PAb((f, d), ("mlp", "embed"), "normal", s_out)}
+    if gated:
+        p["gate"] = PAb((d, f), ("embed", "mlp"), "normal", s_in)
+    return p
+
+
+def mlp(params, x, act="silu", gated=True):
+    actf = jax.nn.silu if act == "silu" else (
+        lambda z: jax.nn.gelu(z, approximate=True))
+    h = x @ params["up"].astype(x.dtype)
+    if gated:
+        h = actf(x @ params["gate"].astype(x.dtype)) * h
+    else:
+        h = actf(h)
+    return h @ params["down"].astype(x.dtype)
+
+
+# -------------------------------------------------- embeddings & loss
+
+def embedding_ab(vocab, d, pad_to: int = 1):
+    """pad_to > 1 rounds the vocab row count up so the vocab dim divides
+    the model axis (otherwise logits replicate — §Perf E1).  Padded rows
+    are masked out of the softmax in chunked_xent."""
+    if pad_to > 1:
+        vocab = -(-vocab // pad_to) * pad_to
+    return {"table": PAb((vocab, d), ("vocab", "embed"), "normal", 1.0)}
+
+
+def embed(params, tokens, scale_by_dim=True):
+    tab = params["table"]
+    out = tab[tokens]
+    if scale_by_dim:
+        out = out * (tab.shape[1] ** 0.5)
+    return out
+
+
+def unembed_logits(params, x, real_vocab: Optional[int] = None):
+    """x: (B,S,D) -> (B,S,V_pad) logits with the tied table; padded
+    vocab rows masked to -inf so sampling can never pick them."""
+    tab = params["table"]
+    logits = x @ tab.T.astype(x.dtype)
+    if real_vocab is not None and real_vocab < tab.shape[0]:
+        logits = logits + ((jnp.arange(tab.shape[0]) >= real_vocab)
+                           * jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def chunked_xent(params, x, labels, chunk: int = 512,
+                 real_vocab: Optional[int] = None):
+    """Cross-entropy without materializing full (B,S,V) logits.
+
+    Scans over sequence chunks; per chunk only (B,chunk,V) exists.
+    Returns mean nll over tokens (label -100 = masked).  Padded vocab
+    rows (>= real_vocab) are excluded from the softmax."""
+    tab = params["table"]
+    B, S, D = x.shape
+    V = tab.shape[0]
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+    pad_mask = None
+    if real_vocab is not None and real_vocab < V:
+        pad_mask = (jnp.arange(V) >= real_vocab) * (-1e30)
+
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)       # (nc,B,c,D)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    @jax.checkpoint
+    def body(carry, xl):
+        tot, cnt = carry
+        xch, lch = xl
+        logits = (xch @ tab.T.astype(xch.dtype)).astype(jnp.float32)
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lch, 0)[..., None], axis=-1)[..., 0]
+        mask = (lch >= 0).astype(jnp.float32)
+        nll = (logz - gold) * mask
+        return (tot + jnp.sum(nll), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())), (xc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,220 @@
+"""Mamba-2 block via SSD (state-space duality, Dao & Gu 2024).
+
+Train path: chunked SSD — intra-chunk quadratic attention-like term plus
+inter-chunk state recurrence (lax.scan over chunks).  Decode path: O(1)
+recurrent state update per token.  Both share parameters.
+
+Shapes: d_inner = expand*d_model, nh = d_inner/head_dim heads,
+state N = d_state, G groups (B/C shared across heads within a group).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models.layers import PAb
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.head_dim
+    conv_dim = di + 2 * s.n_groups * s.d_state
+    return s, di, nh, conv_dim
+
+
+def mamba_ab(cfg: ArchConfig):
+    s, di, nh, conv_dim = _dims(cfg)
+    d = cfg.d_model
+    sc = d ** -0.5
+    return {
+        "in_proj": PAb((d, 2 * di + 2 * s.n_groups * s.d_state + nh),
+                       ("embed", "mlp"), "normal", sc),
+        "conv_w": PAb((s.d_conv, conv_dim), ("conv", "mlp"), "normal", 0.1),
+        "conv_b": PAb((conv_dim,), ("mlp",), "zeros"),
+        "A_log": PAb((nh,), (None,), "zeros"),       # A = -exp(A_log) ~ -1
+        "D": PAb((nh,), (None,), "ones"),
+        "dt_bias": PAb((nh,), (None,), "zeros"),
+        "norm": {"scale": PAb((di,), ("mlp",), "ones")},
+        "out_proj": PAb((di, d), ("mlp", "embed"), "normal", di ** -0.5),
+    }
+
+
+def _split_proj(cfg, proj):
+    s, di, nh, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    z, x, B, C, dt = jnp.split(proj, [di, 2 * di, 2 * di + gn, 2 * di + 2 * gn],
+                               axis=-1)
+    return z, x, B, C, dt
+
+
+def _causal_conv(cfg, params, xbc):
+    """Depthwise causal conv1d + silu. xbc: (B, S, conv_dim)."""
+    s = cfg.ssm
+    w = params["conv_w"].astype(xbc.dtype)              # (d_conv, conv_dim)
+    pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i][None, None]
+              for i in range(s.d_conv))
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def _segsum(a):
+    """a: (..., cs) -> (..., cs, cs) lower-tri matrix of partial sums
+    sum_{j<i..} implemented stably (log-space decays)."""
+    cs = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]         # (..., i, j) = sum(j+1..i)
+    ii = jnp.arange(cs)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dtA, Bh, Ch, chunk, init_state=None):
+    """SSD scan. xh: (B,S,nh,hp) pre-scaled by dt; dtA: (B,S,nh) = dt*A
+    (always f32); Bh/Ch: (B,S,nh,N).  Mixed precision: decay/cumsum math
+    in f32, heavy einsums in xh's dtype (bf16 on TPU), state recurrence
+    accumulated in f32.  Returns (y (B,S,nh,hp), final (B,nh,hp,N) f32)."""
+    Bsz, S, nh, hp = xh.shape
+    N = Bh.shape[-1]
+    nc = S // chunk
+    cd = xh.dtype
+
+    def r(t):  # (B,S,...) -> (B,nc,cs,...)
+        return t.reshape(Bsz, nc, chunk, *t.shape[2:])
+
+    xc, Ac, Bc, Cc = r(xh), r(dtA.astype(jnp.float32)), r(Bh), r(Ch)
+    Acs = jnp.cumsum(Ac, axis=2)                          # (B,nc,cs,nh) f32
+    Lmat = jnp.exp(_segsum(Ac.transpose(0, 1, 3, 2)))     # (B,nc,nh,cs,cs)
+
+    # intra-chunk (diagonal blocks): decay-masked quadratic term
+    scores = jnp.einsum("bclhn,bcshn->bchls", Cc, Bc)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp",
+                        scores * Lmat.astype(cd), xc)
+
+    # chunk states: contribution of each chunk to its end-state (f32 acc)
+    decay_states = jnp.exp(Acs[:, :, -1:, :] - Acs)       # (B,nc,cs,nh)
+    states = jnp.einsum("bcshn,bcsh,bcshp->bchpn", Bc,
+                        decay_states.astype(cd), xc,
+                        preferred_element_type=jnp.float32)
+
+    # inter-chunk recurrence (f32 carry)
+    chunk_decay = jnp.exp(Acs[:, :, -1, :])               # (B,nc,nh)
+    s0 = (jnp.zeros((Bsz, nh, hp, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def scan_body(carry, inp):
+        st, dec = inp                                     # (B,nh,hp,N),(B,nh)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                 # emit PREV state
+
+    final, prev_states = jax.lax.scan(
+        scan_body, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)    # (B,nc,nh,hp,N)
+
+    state_decay = jnp.exp(Acs)                            # (B,nc,cs,nh)
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp", Cc,
+                       prev_states.astype(cd), state_decay.astype(cd))
+    y = (y_diag + y_off).reshape(Bsz, S, nh, hp)
+    return y, final
+
+
+def mamba_train(cfg: ArchConfig, params, x, mesh=None,
+                return_state: bool = False):
+    """Full-sequence Mamba2. x: (B,S,D) -> (B,S,D)."""
+    s, di, nh, conv_dim = _dims(cfg)
+    cd = x.dtype
+    proj = x @ params["in_proj"].astype(cd)
+    z, xi, Bv, Cv, dt = _split_proj(cfg, proj)
+    xbc_raw = jnp.concatenate([xi, Bv, Cv], -1)
+    xbc = _causal_conv(cfg, params, xbc_raw)
+    xi, Bv, Cv = jnp.split(xbc, [di, di + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (nh,)
+    xh = xi.reshape(*xi.shape[:2], nh, s.head_dim)
+    heads_per_group = nh // s.n_groups
+    Bh = jnp.repeat(Bv.reshape(*Bv.shape[:2], s.n_groups, s.d_state),
+                    heads_per_group, axis=2)
+    Ch = jnp.repeat(Cv.reshape(*Cv.shape[:2], s.n_groups, s.d_state),
+                    heads_per_group, axis=2)
+
+    # mixed precision (§Perf E2a): decay/cumsum math stays f32 inside
+    # ssd_chunked, but the heavy tensors (x, B, C) keep the compute dtype
+    # so their cotangents — and the model-axis psums the partitioner
+    # inserts around them — stay bf16 (halves the collective term).
+    y, final_state = ssd_chunked(
+        (xh * dt[..., None].astype(cd)), (dt * A).astype(jnp.float32),
+        Bh, Ch, min(s.chunk, x.shape[1]))
+    y = y + (params["D"].astype(cd)[None, None, :, None] * xh)
+    y = y.reshape(*x.shape[:2], di)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(cd)
+    if return_state:
+        conv_tail = xbc_raw[:, -(s.d_conv - 1):, :]   # rolling conv inputs
+        return out, MambaCache(conv=conv_tail,
+                               state=final_state.astype(cd))
+    return out
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, d_conv-1, conv_dim) rolling conv inputs
+    state: jnp.ndarray   # (B, nh, hp, N) SSM state
+
+
+def mamba_init_cache(cfg, batch, dtype):
+    s, di, nh, conv_dim = _dims(cfg)
+    return MambaCache(
+        conv=jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        state=jnp.zeros((batch, nh, s.head_dim, s.d_state), dtype))
+
+
+def mamba_cache_abstract(cfg, batch, dtype):
+    s, di, nh, conv_dim = _dims(cfg)
+    return MambaCache(
+        conv=jax.ShapeDtypeStruct((batch, s.d_conv - 1, conv_dim), dtype),
+        state=jax.ShapeDtypeStruct((batch, nh, s.head_dim, s.d_state), dtype))
+
+
+def mamba_cache_logical(cfg):
+    return MambaCache(conv=("cache_batch", None, "mlp"),
+                      state=("cache_batch", "heads", None, None))
+
+
+def mamba_decode(cfg: ArchConfig, params, x, cache: MambaCache, mesh=None):
+    """One-token recurrent step. x: (B,1,D)."""
+    s, di, nh, conv_dim = _dims(cfg)
+    cd = x.dtype
+    proj = x[:, 0] @ params["in_proj"].astype(cd)          # (B, ...)
+    z, xi, Bv, Cv, dt = _split_proj(cfg, proj)
+
+    # rolling causal conv
+    xbc_new = jnp.concatenate([xi, Bv, Cv], -1)            # (B, conv_dim)
+    window = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)
+    w = params["conv_w"].astype(cd)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w) + params["conv_b"].astype(cd)
+    conv_out = jax.nn.silu(conv_out)
+    xi, Bv, Cv = jnp.split(conv_out, [di, di + s.n_groups * s.d_state], -1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                   # (B,nh)
+    xh = xi.reshape(-1, nh, s.head_dim).astype(jnp.float32)
+    hpg = nh // s.n_groups
+    Bh = jnp.repeat(Bv.reshape(-1, s.n_groups, s.d_state), hpg, 1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv.reshape(-1, s.n_groups, s.d_state), hpg, 1).astype(jnp.float32)
+
+    state = cache.state.astype(jnp.float32) * dA[:, :, None, None] \
+        + (dt[..., None] * xh)[..., None] * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    y = y + params["D"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(-1, di).astype(cd)
+    y = L.rmsnorm(params["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["out_proj"].astype(cd))[:, None]     # (B,1,D)
+    return out, MambaCache(conv=window[:, 1:], state=state.astype(cache.state.dtype))

@@ -1,0 +1,546 @@
+"""Unified model assembly: abstract params, train forward, prefill and
+decode for every assigned family (dense / moe / ssm / hybrid / encdec /
+vlm).
+
+Layer stacking: homogeneous runs of blocks are stacked on a leading
+``layers`` axis and executed with lax.scan (small HLO => fast compile,
+remat-friendly).  Heterogeneous structures (jamba groups, whisper
+enc/dec, deepseek leading dense layers) are split into several
+homogeneous scans.
+
+Every forward returns (hidden_states, aux) where aux carries the MoE
+load-balancing loss.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import attention as ATT
+from repro.models import moe as MOE
+from repro.models import mamba2 as SSM
+from repro.models.layers import PAb
+from repro.dist.sharding import constrain
+
+
+# ================================================================ abstract
+
+def _norm_ab(cfg):
+    return (L.layernorm_ab(cfg.d_model) if cfg.norm == "layernorm"
+            else L.rmsnorm_ab(cfg.d_model))
+
+
+def _apply_norm(cfg, p, x):
+    return (L.layernorm(p, x, cfg.norm_eps) if cfg.norm == "layernorm"
+            else L.rmsnorm(p, x, cfg.norm_eps))
+
+
+def _attn_block_ab(cfg, ffn: str, cross: bool = False):
+    blk = {"ln1": _norm_ab(cfg), "ln2": _norm_ab(cfg)}
+    blk["attn"] = ATT.mla_ab(cfg) if cfg.mla else ATT.gqa_ab(cfg)
+    if cross:
+        blk["ln_x"] = _norm_ab(cfg)
+        blk["xattn"] = ATT.gqa_ab(cfg)
+    if ffn == "moe":
+        blk["ffn"] = MOE.moe_ab(cfg)
+    elif ffn == "mlp":
+        blk["ffn"] = L.mlp_ab(cfg.d_model, cfg.d_ff, cfg.gated)
+    return blk
+
+
+def _mamba_block_ab(cfg, ffn: Optional[str]):
+    blk = {"ln1": _norm_ab(cfg), "mamba": SSM.mamba_ab(cfg)}
+    if ffn:
+        blk["ln2"] = _norm_ab(cfg)
+        blk["ffn"] = (MOE.moe_ab(cfg) if ffn == "moe"
+                      else L.mlp_ab(cfg.d_model, cfg.d_ff, cfg.gated))
+    return blk
+
+
+def _stack_ab(tree, n):
+    """Stack an abstract tree n times along a new leading ``layers`` axis."""
+    return jax.tree.map(
+        lambda ab: PAb((n,) + ab.shape, ("layers",) + ab.logical,
+                       ab.init, ab.scale),
+        tree, is_leaf=L.is_pab)
+
+
+def _jamba_group_ab(cfg):
+    """One jamba group: pattern cfg.hybrid_group; MoE at odd positions."""
+    group = {}
+    for i, kind in enumerate(cfg.hybrid_group):
+        ffn = "moe" if (i % 2 == 1) else "mlp"
+        if kind == "m":
+            group[f"sub{i}"] = _mamba_block_ab(cfg, ffn)
+        else:
+            group[f"sub{i}"] = _attn_block_ab(cfg, ffn)
+    return group
+
+
+def abstract_params(cfg: ArchConfig):
+    p: dict[str, Any] = {
+        "embed": L.embedding_ab(cfg.vocab, cfg.d_model,
+                                pad_to=cfg.vocab_pad_to),
+        "final_norm": _norm_ab(cfg),
+    }
+    if cfg.pos_embedding == "learned":
+        p["pos_embed"] = {"table": PAb((cfg.max_position, cfg.d_model),
+                                       (None, "embed"), "normal", 0.02)}
+    if cfg.family in ("dense", "vlm"):
+        p["blocks"] = _stack_ab(_attn_block_ab(cfg, "mlp"), cfg.n_layers)
+    elif cfg.family == "moe":
+        nd = cfg.moe.first_dense
+        if nd:
+            p["dense_blocks"] = _stack_ab(_attn_block_ab(cfg, "mlp"), nd)
+        p["blocks"] = _stack_ab(_attn_block_ab(cfg, "moe"), cfg.n_layers - nd)
+    elif cfg.family == "ssm":
+        p["blocks"] = _stack_ab(_mamba_block_ab(cfg, None), cfg.n_layers)
+    elif cfg.family == "hybrid":
+        g = len(cfg.hybrid_group)
+        p["blocks"] = _stack_ab(_jamba_group_ab(cfg), cfg.n_layers // g)
+    elif cfg.family == "encdec":
+        p["enc_pos"] = {"table": PAb((cfg.enc_seq, cfg.d_model),
+                                     (None, "embed"), "normal", 0.02)}
+        p["enc_blocks"] = _stack_ab(_attn_block_ab(cfg, "mlp"), cfg.enc_layers)
+        p["enc_norm"] = _norm_ab(cfg)
+        p["blocks"] = _stack_ab(_attn_block_ab(cfg, "mlp", cross=True),
+                                cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+def init_params(cfg: ArchConfig, key, dtype=None):
+    return L.init_tree(abstract_params(cfg), key,
+                       dtype or jnp.dtype(cfg.params_dtype))
+
+
+def param_shardings(cfg: ArchConfig, mesh):
+    return L.spec_tree(abstract_params(cfg), mesh)
+
+
+def param_shapes(cfg: ArchConfig, dtype=None):
+    return L.shape_tree(abstract_params(cfg),
+                        dtype or jnp.dtype(cfg.params_dtype))
+
+
+# ================================================================= blocks
+
+def _attn_block(cfg, blk, x, positions, mesh, causal=True, enc_out=None,
+                collect=False):
+    """Pre-norm attention block (train/prefill path)."""
+    h = _apply_norm(cfg, blk["ln1"], x)
+    piece = None
+    if cfg.mla:
+        if collect:
+            h, lat = ATT.mla_train(cfg, blk["attn"], h, positions, mesh,
+                                   return_latent=True)
+            piece = ATT.MLACache(c_kv=lat[0], k_rope=lat[1])
+        else:
+            h = ATT.mla_train(cfg, blk["attn"], h, positions, mesh)
+    else:
+        if collect:
+            h, kv = ATT.gqa_train(cfg, blk["attn"], h, positions, mesh,
+                                  causal=causal, return_kv=True)
+            piece = ATT.KVCache(k=kv[0], v=kv[1])
+        else:
+            h = ATT.gqa_train(cfg, blk["attn"], h, positions, mesh,
+                              causal=causal)
+    x = x + h
+    if enc_out is not None:
+        h = _apply_norm(cfg, blk["ln_x"], x)
+        h = ATT.gqa_train(cfg, blk["xattn"], h, positions, mesh,
+                          causal=False, kv_override=enc_out)
+        x = x + h
+    h = _apply_norm(cfg, blk["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in blk and "router" in blk.get("ffn", {}):
+        h, aux = MOE.moe_block(cfg, blk["ffn"], h, mesh)
+    elif "ffn" in blk:
+        h = L.mlp(blk["ffn"], h, cfg.act, cfg.gated)
+    out = x + h
+    if mesh is not None and out.shape[1] > 1:
+        # sequence parallelism between blocks (§Perf E2b): the psum-
+        # producing projections reduce-scatter into seq shards instead
+        # of all-reducing into replicas; attention/MoE gather on demand
+        out = constrain(out, mesh, ("batch", "seq_sp", None))
+    if collect:
+        return out, aux, piece
+    return out, aux
+
+
+def _mamba_block(cfg, blk, x, mesh, collect=False):
+    h = _apply_norm(cfg, blk["ln1"], x)
+    piece = None
+    if collect:
+        h, piece = SSM.mamba_train(cfg, blk["mamba"], h, mesh,
+                                   return_state=True)
+    else:
+        h = SSM.mamba_train(cfg, blk["mamba"], h, mesh)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if "ffn" in blk:
+        h = _apply_norm(cfg, blk["ln2"], x)
+        if "router" in blk["ffn"]:
+            h, aux = MOE.moe_block(cfg, blk["ffn"], h, mesh)
+        else:
+            h = L.mlp(blk["ffn"], h, cfg.act, cfg.gated)
+        x = x + h
+    if mesh is not None and x.shape[1] > 1:
+        x = constrain(x, mesh, ("batch", "seq_sp", None))  # §Perf E2b
+    if collect:
+        return x, aux, piece
+    return x, aux
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def _scan_blocks(cfg, stacked, x, body, collect=False):
+    """lax.scan over stacked layer params.
+    body(blk, x) -> (x, aux) or (x, aux, cache_piece) when collect."""
+    def step(carry, blk):
+        x, aux = carry
+        out = body(blk, x)
+        if collect:
+            x, a, piece = out
+            return (x, aux + a), piece
+        x, a = out
+        return (x, aux + a), None
+
+    (x, aux), pieces = jax.lax.scan(
+        step, (x, jnp.zeros((), jnp.float32)), stacked)
+    if collect:
+        return x, aux, pieces
+    return x, aux
+
+
+# ================================================================ forward
+
+def forward_train(cfg: ArchConfig, params, tokens, mesh=None,
+                  extra_embeds=None, enc_frames=None, collect_cache=False):
+    """Training/prefill forward -> (hidden (B,S,D), aux[, cache pieces]).
+
+    extra_embeds: (B, P, D) patch embeddings prepended (vlm stub).
+    enc_frames:   (B, enc_seq, D) audio frames (encdec stub input).
+    collect_cache: also return per-layer KV/latent/state cache pieces
+    (prefill).  Piece trees are stacked along a leading layers axis.
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embed"], tokens, cfg.embed_scale).astype(cd)
+    if extra_embeds is not None:
+        x = jnp.concatenate([extra_embeds.astype(cd), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos_embed"]["table"][:S][None].astype(cd)
+    if mesh is not None:
+        x = constrain(x, mesh, ("batch", "seq", None))
+
+    enc_out = None
+    if cfg.family == "encdec":
+        e = enc_frames.astype(cd) + params["enc_pos"]["table"][None].astype(cd)
+        e_pos = jnp.broadcast_to(jnp.arange(e.shape[1])[None], e.shape[:2])
+        body = _maybe_remat(cfg, lambda blk, h: _attn_block(
+            cfg, blk, h, e_pos, mesh, causal=False))
+        e, _ = _scan_blocks(cfg, params["enc_blocks"], e, body)
+        enc_out = _apply_norm(cfg, params["enc_norm"], e)
+
+    aux = jnp.zeros((), jnp.float32)
+    pieces, dense_pieces = None, None
+    cc = collect_cache
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        if cfg.family == "moe" and cfg.moe.first_dense:
+            body = _maybe_remat(cfg, lambda blk, h: _attn_block(
+                cfg, blk, h, positions, mesh, collect=cc))
+            out = _scan_blocks(cfg, params["dense_blocks"], x, body, collect=cc)
+            x, a = out[0], out[1]
+            dense_pieces = out[2] if cc else None
+            aux += a
+        body = _maybe_remat(cfg, lambda blk, h: _attn_block(
+            cfg, blk, h, positions, mesh, enc_out=enc_out, collect=cc))
+        out = _scan_blocks(cfg, params["blocks"], x, body, collect=cc)
+        x, a = out[0], out[1]
+        pieces = out[2] if cc else None
+        aux += a
+    elif cfg.family == "ssm":
+        body = _maybe_remat(cfg, lambda blk, h: _mamba_block(
+            cfg, blk, h, mesh, collect=cc))
+        out = _scan_blocks(cfg, params["blocks"], x, body, collect=cc)
+        x, a = out[0], out[1]
+        pieces = out[2] if cc else None
+        aux += a
+    elif cfg.family == "hybrid":
+        def group_body(blk, h):
+            g_aux = jnp.zeros((), jnp.float32)
+            g_pieces = {}
+            for i, kind in enumerate(cfg.hybrid_group):
+                sub = blk[f"sub{i}"]
+                if kind == "m":
+                    out = _mamba_block(cfg, sub, h, mesh, collect=cc)
+                else:
+                    out = _attn_block(cfg, sub, h, positions, mesh, collect=cc)
+                h, a = out[0], out[1]
+                if cc:
+                    g_pieces[f"sub{i}"] = out[2]
+                g_aux += a
+            if cc:
+                return h, g_aux, g_pieces
+            return h, g_aux
+        out = _scan_blocks(cfg, params["blocks"], x,
+                           _maybe_remat(cfg, group_body), collect=cc)
+        x, a = out[0], out[1]
+        pieces = out[2] if cc else None
+        aux += a
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    if collect_cache:
+        return x, aux, (pieces, dense_pieces, enc_out)
+    return x, aux
+
+
+def loss_fn(cfg: ArchConfig, params, tokens, labels, mesh=None,
+            extra_embeds=None, enc_frames=None, aux_weight=0.01):
+    x, aux = forward_train(cfg, params, tokens, mesh,
+                           extra_embeds=extra_embeds, enc_frames=enc_frames)
+    if extra_embeds is not None:   # vlm: loss only on the text positions
+        x = x[:, extra_embeds.shape[1]:]
+    nll = L.chunked_xent(params["embed"], x, labels, real_vocab=cfg.vocab)
+    return nll + aux_weight * aux, (nll, aux)
+
+
+# ================================================================= decode
+
+class DecodeCache(NamedTuple):
+    layers: Any            # stacked per-layer cache pytree
+    dense_layers: Any      # deepseek leading dense blocks (or None)
+    enc_out: Any           # encdec cross-attention memory (or None)
+
+
+def _layer_cache_abstract(cfg, batch, max_len, dtype, kind="a"):
+    if kind == "m":
+        return SSM.mamba_cache_abstract(cfg, batch, dtype)
+    if cfg.mla:
+        return ATT.mla_cache_abstract(cfg, batch, max_len, dtype)
+    return ATT.gqa_cache_abstract(cfg, batch, max_len, dtype)
+
+
+def _stack_abstract(tree, n):
+    return jax.tree.map(
+        lambda sd: jax.ShapeDtypeStruct((n,) + sd.shape, sd.dtype), tree)
+
+
+def cache_abstract(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree of the decode cache (dry-run input)."""
+    dense_layers = None
+    if cfg.family == "hybrid":
+        group = {}
+        for i, kind in enumerate(cfg.hybrid_group):
+            group[f"sub{i}"] = _layer_cache_abstract(cfg, batch, max_len,
+                                                     dtype, kind)
+        layers = _stack_abstract(group, cfg.n_layers // len(cfg.hybrid_group))
+    elif cfg.family == "ssm":
+        layers = _stack_abstract(
+            _layer_cache_abstract(cfg, batch, max_len, dtype, "m"),
+            cfg.n_layers)
+    elif cfg.family == "moe" and cfg.moe.first_dense:
+        layers = _stack_abstract(
+            _layer_cache_abstract(cfg, batch, max_len, dtype),
+            cfg.n_layers - cfg.moe.first_dense)
+        dense_layers = _stack_abstract(
+            _layer_cache_abstract(cfg, batch, max_len, dtype),
+            cfg.moe.first_dense)
+    else:
+        layers = _stack_abstract(
+            _layer_cache_abstract(cfg, batch, max_len, dtype), cfg.n_layers)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = {
+            "mem": jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model),
+                                        dtype)}
+    return DecodeCache(layers=layers, dense_layers=dense_layers,
+                       enc_out=enc_out)
+
+
+def cache_zeros(cfg: ArchConfig, batch, max_len, dtype=jnp.bfloat16):
+    return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                        cache_abstract(cfg, batch, max_len, dtype))
+
+
+def _cache_logical_one(cfg, kind="a"):
+    if kind == "m":
+        return SSM.mamba_cache_logical(cfg)
+    if cfg.mla:
+        return ATT.mla_cache_logical(cfg)
+    return ATT.gqa_cache_logical(cfg)
+
+
+def cache_logical(cfg: ArchConfig):
+    """Logical-axis pytree matching cache_abstract (leading layers axis)."""
+    def is_ls(v):   # a leaf = plain tuple of axis names (NamedTuples pass)
+        return (isinstance(v, tuple) and not hasattr(v, "_fields")
+                and all(isinstance(e, (str, type(None))) for e in v))
+
+    def stack(t):
+        return jax.tree.map(lambda ls: ("layers",) + tuple(ls), t,
+                            is_leaf=is_ls)
+
+    dense_layers = None
+    if cfg.family == "hybrid":
+        group = {f"sub{i}": _cache_logical_one(cfg, kind)
+                 for i, kind in enumerate(cfg.hybrid_group)}
+        layers = stack(group)
+    elif cfg.family == "ssm":
+        layers = stack(_cache_logical_one(cfg, "m"))
+    elif cfg.family == "moe" and cfg.moe.first_dense:
+        layers = stack(_cache_logical_one(cfg))
+        dense_layers = stack(_cache_logical_one(cfg))
+    else:
+        layers = stack(_cache_logical_one(cfg))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = {"mem": ("cache_batch", None, None)}
+    return DecodeCache(layers=layers, dense_layers=dense_layers,
+                       enc_out=enc_out)
+
+
+def _attn_block_decode(cfg, blk, x, cache, positions, mesh, enc_mem=None):
+    h = _apply_norm(cfg, blk["ln1"], x)
+    if cfg.mla:
+        h, cache = ATT.mla_decode(cfg, blk["attn"], h, cache, positions, mesh)
+    else:
+        h, cache = ATT.gqa_decode(cfg, blk["attn"], h, cache, positions, mesh)
+    x = x + h
+    if enc_mem is not None:
+        h = _apply_norm(cfg, blk["ln_x"], x)
+        h = ATT.gqa_train(cfg, blk["xattn"], h, positions, mesh,
+                          causal=False, kv_override=enc_mem)
+        x = x + h
+    h = _apply_norm(cfg, blk["ln2"], x)
+    if "ffn" in blk and "router" in blk.get("ffn", {}):
+        h, _ = MOE.moe_block(cfg, blk["ffn"], h, mesh)
+    elif "ffn" in blk:
+        h = L.mlp(blk["ffn"], h, cfg.act, cfg.gated)
+    return x + h, cache
+
+
+def _mamba_block_decode(cfg, blk, x, cache, mesh):
+    h = _apply_norm(cfg, blk["ln1"], x)
+    h, cache = SSM.mamba_decode(cfg, blk["mamba"], h, cache, mesh)
+    x = x + h
+    if "ffn" in blk:
+        h = _apply_norm(cfg, blk["ln2"], x)
+        if "router" in blk["ffn"]:
+            h, _ = MOE.moe_block(cfg, blk["ffn"], h, mesh)
+        else:
+            h = L.mlp(blk["ffn"], h, cfg.act, cfg.gated)
+        x = x + h
+    return x, cache
+
+
+def decode_step(cfg: ArchConfig, params, cache: DecodeCache, tokens,
+                positions, mesh=None):
+    """One decode step. tokens (B,1) int32, positions (B,1) int32.
+    Returns (logits (B,1,V), new cache)."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    x = L.embed(params["embed"], tokens, cfg.embed_scale).astype(cd)
+    if cfg.pos_embedding == "learned":
+        x = x + params["pos_embed"]["table"][positions[0, 0]][None, None].astype(cd)
+    enc_mem = cache.enc_out["mem"].astype(cd) if cache.enc_out else None
+
+    def scan_attn(x, stacked_params, stacked_cache, with_cross):
+        def step(carry, blk_cache):
+            blk, c = blk_cache
+            h, c = _attn_block_decode(cfg, blk, carry, c, positions, mesh,
+                                      enc_mem=enc_mem if with_cross else None)
+            return h, c
+        return jax.lax.scan(step, x, (stacked_params, stacked_cache))
+
+    new_dense = cache.dense_layers
+    if cfg.family == "moe" and cfg.moe.first_dense:
+        x, new_dense = scan_attn(x, params["dense_blocks"],
+                                 cache.dense_layers, False)
+        x, new_layers = scan_attn(x, params["blocks"], cache.layers, False)
+    elif cfg.family == "ssm":
+        def step(carry, blk_cache):
+            blk, c = blk_cache
+            h, c = _mamba_block_decode(cfg, blk, carry, c, mesh)
+            return h, c
+        x, new_layers = jax.lax.scan(step, x, (params["blocks"], cache.layers))
+    elif cfg.family == "hybrid":
+        def step(carry, blk_cache):
+            blk, c = blk_cache
+            h = carry
+            new_c = {}
+            for i, kind in enumerate(cfg.hybrid_group):
+                sub, subc = blk[f"sub{i}"], c[f"sub{i}"]
+                if kind == "m":
+                    h, nc = _mamba_block_decode(cfg, sub, h, subc, mesh)
+                else:
+                    h, nc = _attn_block_decode(cfg, sub, h, subc, positions,
+                                               mesh)
+                new_c[f"sub{i}"] = nc
+            return h, new_c
+        x, new_layers = jax.lax.scan(step, x, (params["blocks"], cache.layers))
+    else:
+        x, new_layers = scan_attn(x, params["blocks"], cache.layers,
+                                  cfg.family == "encdec")
+
+    x = _apply_norm(cfg, params["final_norm"], x)
+    logits = L.unembed_logits(params["embed"], x, real_vocab=cfg.vocab)
+    return logits, DecodeCache(layers=new_layers, dense_layers=new_dense,
+                               enc_out=cache.enc_out)
+
+
+def _pad_piece(piece, max_len):
+    """Left-align prefill cache pieces into max_len-sized buffers.
+    Dispatch on the cache NamedTuple type (layer-stacked: leading L axis).
+    KV: (L,B,H,S,hd) pad axis 3; MLA: (L,B,S,r) pad axis 2; Mamba final
+    states have no sequence axis (nothing to pad)."""
+    def pad_axis(x, axis):
+        padw = [(0, 0)] * x.ndim
+        padw[axis] = (0, max_len - x.shape[axis])
+        return jnp.pad(x, padw)
+
+    def one(c):
+        if isinstance(c, ATT.KVCache):
+            return ATT.KVCache(k=pad_axis(c.k, 3), v=pad_axis(c.v, 3))
+        if isinstance(c, ATT.MLACache):
+            return ATT.MLACache(c_kv=pad_axis(c.c_kv, 2),
+                                k_rope=pad_axis(c.k_rope, 2))
+        return c   # MambaCache: recurrent state, no padding
+
+    return jax.tree.map(
+        one, piece,
+        is_leaf=lambda v: isinstance(v, (ATT.KVCache, ATT.MLACache,
+                                         SSM.MambaCache)))
+
+
+def prefill(cfg: ArchConfig, params, tokens, max_len, mesh=None,
+            enc_frames=None, extra_embeds=None):
+    """Run the full prompt once, returning (last-token logits, a decode
+    cache valid for positions < S, next position S).  The KV/latent/state
+    pieces are captured inside the same layer scan as the forward (no
+    second pass) and left-aligned into max_len buffers."""
+    B, S = tokens.shape[0], tokens.shape[1]
+    x, _, (pieces, dense_pieces, enc_out) = forward_train(
+        cfg, params, tokens, mesh, extra_embeds=extra_embeds,
+        enc_frames=enc_frames, collect_cache=True)
+    logits = L.unembed_logits(params["embed"], x[:, -1:], real_vocab=cfg.vocab)
+
+    cd = jnp.dtype(cfg.compute_dtype)
+    layers = jax.tree.map(lambda v: v.astype(cd), _pad_piece(pieces, max_len))
+    dense_layers = (jax.tree.map(lambda v: v.astype(cd),
+                                 _pad_piece(dense_pieces, max_len))
+                    if dense_pieces is not None else None)
+    enc = {"mem": enc_out.astype(cd)} if enc_out is not None else None
+    return logits, DecodeCache(layers=layers, dense_layers=dense_layers,
+                               enc_out=enc), S

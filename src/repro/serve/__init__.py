@@ -1,0 +1,3 @@
+from repro.serve.engine import ServeEngine, GenerationConfig
+
+__all__ = ["ServeEngine", "GenerationConfig"]

@@ -1,0 +1,78 @@
+"""Batched serving engine: prefill once, decode step-by-step with a
+static-shape KV cache; greedy or temperature sampling; per-request stop.
+
+The decode step is one jit'd function reused every token (no
+recompilation: positions is a traced input, the cache has static
+max_len).  On a mesh, the same engine drives the sharded decode_step
+lowered by the dry-run (sequence-sharded caches etc.).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass
+class GenerationConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    eos_id: Optional[int] = None
+    seed: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, max_len: int = 256,
+                 mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.mesh = mesh
+        self._decode = jax.jit(
+            lambda p, c, t, pos: M.decode_step(cfg, p, c, t, pos, mesh=mesh))
+        self._prefill = jax.jit(
+            lambda p, t, **kw: M.prefill(cfg, p, t, max_len, mesh=mesh, **kw),
+            static_argnames=())
+
+    def generate(self, tokens: np.ndarray, gen: GenerationConfig,
+                 enc_frames=None, extra_embeds=None):
+        """tokens: (B, S) prompt. Returns (B, max_new_tokens) int32."""
+        B, S = tokens.shape
+        assert S + gen.max_new_tokens <= self.max_len
+        kw = {}
+        if enc_frames is not None:
+            kw["enc_frames"] = enc_frames
+        if extra_embeds is not None:
+            kw["extra_embeds"] = extra_embeds
+        logits, cache, pos = self._prefill(self.params,
+                                           jnp.asarray(tokens), **kw)
+        key = jax.random.PRNGKey(gen.seed)
+        out = []
+        done = np.zeros(B, bool)
+        cur = self._sample(logits[:, -1], gen, key)
+        for i in range(gen.max_new_tokens):
+            out.append(np.asarray(cur))
+            if gen.eos_id is not None:
+                done |= out[-1][:, 0] == gen.eos_id
+                if done.all():
+                    break
+            positions = jnp.full((B, 1), pos + i, jnp.int32)
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(cur), positions)
+            key, sub = jax.random.split(key)
+            cur = self._sample(logits[:, -1], gen, sub)
+        return np.concatenate(out, axis=1)
+
+    @staticmethod
+    def _sample(logits, gen: GenerationConfig, key):
+        if gen.temperature <= 0:
+            return jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        probs_logits = logits / gen.temperature
+        return jax.random.categorical(key, probs_logits, axis=-1)[:, None] \
+            .astype(jnp.int32)

@@ -1,0 +1,146 @@
+"""Optimizers from scratch (no optax): AdamW and Adafactor.
+
+Functional API: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params, lr) -> (new_params, new_state)``.  State trees mirror the param
+tree, so the same PartitionSpecs shard optimizer state (Zero-style).
+
+Adafactor (Shazeer & Stern 2018) keeps factored second moments for
+params with ndim >= 2 (row + col accumulators instead of a full moment
+tensor) — the memory trick that lets the 398B/671B configs fit a v5e
+pod (see EXPERIMENTS.md §Dry-run bytes/device).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(tree, max_norm):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda x: (x * scale).astype(x.dtype), tree), n
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable  # (grads, state, params, lr) -> (params, state)
+    name: str = "opt"
+
+
+def _map_like(grads, fn, *other_trees):
+    """Map fn(g_leaf, *other_leaves) over grads' structure; other trees are
+    flattened only down to grads' leaves (their leaves may be pytrees,
+    e.g. FactoredMoment).  Returns trees of each output component."""
+    g_leaves, treedef = jax.tree.flatten(grads)
+    others = [treedef.flatten_up_to(t) for t in other_trees]
+    outs = [fn(g, *extras) for g, *extras in zip(g_leaves, *others)]
+    n_out = len(outs[0])
+    return tuple(jax.tree.unflatten(treedef, [o[i] for o in outs])
+                 for i in range(n_out))
+
+
+# ----------------------------------------------------------------- AdamW
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        f32 = lambda x: jnp.zeros(x.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(f32, params),
+                         nu=jax.tree.map(f32, params),
+                         count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            step = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            step = step + weight_decay * p.astype(jnp.float32)
+            return (p - lr * step).astype(p.dtype), m, v
+
+        new_p, new_m, new_v = _map_like(grads, upd, state.mu, state.nu, params)
+        return new_p, AdamState(mu=new_m, nu=new_v, count=c)
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+# -------------------------------------------------------------- Adafactor
+
+class FactoredMoment(NamedTuple):
+    row: jnp.ndarray     # mean of squares over the last axis
+    col: jnp.ndarray     # mean of squares over the second-to-last axis
+
+
+class AdafactorState(NamedTuple):
+    moments: Any         # FactoredMoment for ndim>=2, full nu otherwise
+    count: jnp.ndarray
+
+
+def adafactor(decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return FactoredMoment(
+                    row=jnp.zeros(p.shape[:-1], jnp.float32),
+                    col=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32))
+            return jnp.zeros(p.shape, jnp.float32)
+        return AdafactorState(moments=jax.tree.map(one, params),
+                              count=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        c = state.count + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if isinstance(m, FactoredMoment):
+                row = beta * m.row + (1 - beta) * jnp.mean(g2, axis=-1)
+                col = beta * m.col + (1 - beta) * jnp.mean(g2, axis=-2)
+                row_mean = jnp.mean(row, axis=-1, keepdims=True)
+                vhat = (row[..., None] / jnp.maximum(row_mean[..., None], eps)
+                        ) * col[..., None, :]
+                step = g * jax.lax.rsqrt(jnp.maximum(vhat, eps))
+                new_m = FactoredMoment(row=row, col=col)
+            else:
+                nu = beta * m + (1 - beta) * g2
+                step = g * jax.lax.rsqrt(jnp.maximum(nu, eps))
+                new_m = nu
+            # update clipping (RMS of step <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+            step = step / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p - lr * step).astype(p.dtype), new_m
+
+        new_p, new_m = _map_like(grads, upd, state.moments, params)
+        return new_p, AdafactorState(moments=new_m, count=c)
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def get_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise KeyError(name)

@@ -1,0 +1,38 @@
+"""Dry-run smoke: one cheap cell per step-kind compiles on the
+production mesh in a subprocess (512 host devices)."""
+import json
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+
+SRC = Path(__file__).resolve().parent.parent / "src"
+
+
+def _run_cell(arch, shape, tmp):
+    r = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+         "--shape", shape, "--mesh", "single", "--out", str(tmp)],
+        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+        capture_output=True, text=True, timeout=560)
+    tag = f"{arch}__{shape}__single"
+    out = json.loads((Path(tmp) / f"{tag}.json").read_text())
+    assert out["status"] == "ok", (out["status"], r.stdout[-800:],
+                                   r.stderr[-800:])
+    roof = out["roofline"]
+    assert roof["flops"] > 0 and roof["wire_bytes_per_dev"] >= 0
+    assert out["bytes_per_device"] > 0
+    return out
+
+
+def test_dryrun_decode_cell():
+    with tempfile.TemporaryDirectory() as tmp:
+        out = _run_cell("internvl2-1b", "decode_32k", tmp)
+        assert out["roofline"]["bottleneck"] in ("compute", "memory",
+                                                 "collective")
+
+
+def test_dryrun_prefill_cell():
+    with tempfile.TemporaryDirectory() as tmp:
+        _run_cell("chatglm3-6b", "prefill_32k", tmp)

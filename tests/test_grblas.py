@@ -1,0 +1,100 @@
+"""grblas container + ops correctness vs scipy/dense oracles."""
+import numpy as np
+import scipy.sparse as sp
+import jax.numpy as jnp
+import pytest
+
+from repro.grblas import (
+    SparseMatrix, mxv, vxm, mxm, reals_ring, min_plus_ring, boolean_ring,
+    plap_edge_semiring,
+)
+
+
+def _rand_sparse(rng, n, m, density=0.1):
+    A = sp.random(n, m, density=density, random_state=np.random.RandomState(0),
+                  format="coo")
+    return A
+
+
+@pytest.mark.parametrize("n,m", [(17, 17), (64, 64), (50, 30)])
+def test_mxv_matches_scipy(rng, n, m):
+    A = _rand_sparse(rng, n, m)
+    x = rng.standard_normal(m)
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    got = mxv(M, jnp.asarray(x))
+    np.testing.assert_allclose(np.asarray(got), A @ x, rtol=1e-10)
+
+
+def test_spmm_multivector(rng):
+    A = _rand_sparse(rng, 40, 40)
+    X = rng.standard_normal((40, 5))
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    got = mxm(M, jnp.asarray(X))
+    np.testing.assert_allclose(np.asarray(got), A @ X, rtol=1e-10)
+    # COO path agrees with ELL path
+    got_coo = mxm(M, jnp.asarray(X), use_ell=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(got_coo), rtol=1e-10)
+
+
+def test_vxm_transposes(rng):
+    A = _rand_sparse(rng, 30, 50)
+    x = rng.standard_normal(30)
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    got = vxm(jnp.asarray(x), M)
+    np.testing.assert_allclose(np.asarray(got), x @ A, rtol=1e-10)
+
+
+def test_min_plus_ring(rng):
+    """One SpMV under (min,+) = one relaxation step of shortest paths."""
+    A = _rand_sparse(rng, 25, 25, 0.2)
+    A.data = np.abs(A.data) + 0.1
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    x = np.abs(rng.standard_normal(25))
+    got = np.asarray(mxv(M, jnp.asarray(x), min_plus_ring))
+    dense = A.toarray()
+    want = np.full(25, np.inf)
+    for i in range(25):
+        nz = dense[i] != 0
+        if nz.any():
+            want[i] = np.min(dense[i][nz] + x[nz])
+    np.testing.assert_allclose(got, want, rtol=1e-10)
+
+
+def test_edge_semiring_plap(rng):
+    """Edge-semiring SpMV == explicit p-Laplacian apply."""
+    from repro.graphs import ring_of_cliques
+    W, _ = ring_of_cliques(3, 6)
+    x = jnp.asarray(rng.standard_normal(W.n_rows))
+    p = 1.5
+    got = np.asarray(mxm(W, x, plap_edge_semiring(p, eps=0.0)))
+    Wd = np.asarray(W.to_dense())
+    xd = np.asarray(x)
+    want = np.zeros(W.n_rows)
+    for i in range(W.n_rows):
+        d = xd[i] - xd
+        want[i] = np.sum(Wd[i] * np.abs(d) ** (p - 1) * np.sign(d))
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-10)
+
+
+def test_bsr_layout_roundtrip(rng):
+    A = _rand_sparse(rng, 100, 100, 0.05)
+    M = SparseMatrix.from_scipy(A, build_bsr=True, block_size=16,
+                                dtype=jnp.float64)
+    # reconstruct dense from BSR blocks
+    bs = M.block_size
+    n_rb = -(-M.n_rows // bs)
+    dense = np.zeros((n_rb * bs, n_rb * bs))
+    rb = np.asarray(M.bsr_row_ids)
+    cb = np.asarray(M.bsr_indices)
+    blocks = np.asarray(M.bsr_blocks)
+    for b in range(len(rb)):
+        dense[rb[b]*bs:(rb[b]+1)*bs, cb[b]*bs:(cb[b]+1)*bs] = blocks[b]
+    np.testing.assert_allclose(dense[:100, :100], A.toarray(), rtol=1e-10)
+    assert M.fill_ratio >= 1.0
+
+
+def test_row_degrees_and_sums(rng):
+    A = _rand_sparse(rng, 33, 33, 0.15)
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    np.testing.assert_allclose(np.asarray(M.row_sums()),
+                               np.asarray(A.sum(axis=1)).ravel(), rtol=1e-10)

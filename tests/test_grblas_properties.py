@@ -1,0 +1,111 @@
+"""Hypothesis property tests for the algebraic layer + system invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.grblas import (SparseMatrix, mxv, reals_ring, min_plus_ring,
+                          boolean_ring, max_times_ring)
+from repro.grblas.semiring import phi_p
+from repro.core import phi as PHI
+from repro.core import metrics
+from repro.graphs import ring_of_cliques
+
+
+finite = st.floats(min_value=-100, max_value=100, allow_nan=False,
+                   width=32)
+
+
+@settings(max_examples=50, deadline=None)
+@given(a=finite, b=finite, c=finite)
+def test_semiring_laws_reals(a, b, c):
+    for ring in (reals_ring, min_plus_ring, max_times_ring):
+        A, B, C = jnp.float32(a), jnp.float32(b), jnp.float32(c)
+        # add associativity + commutativity
+        l = ring.add(ring.add(A, B), C)
+        r = ring.add(A, ring.add(B, C))
+        np.testing.assert_allclose(float(l), float(r), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(float(ring.add(A, B)),
+                                   float(ring.add(B, A)), rtol=1e-6)
+        # identities
+        np.testing.assert_allclose(float(ring.add(A, ring.zero)), a,
+                                   rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(float(ring.mul(A, ring.one)), a,
+                                   rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(x=finite, p=st.floats(min_value=1.05, max_value=2.0))
+def test_phi_p_odd_and_monotone(x, p):
+    f = float(phi_p(jnp.float64(x), p))
+    f_neg = float(phi_p(jnp.float64(-x), p))
+    np.testing.assert_allclose(f, -f_neg, rtol=1e-8, atol=1e-12)
+    if abs(x) > 1e-3:
+        g = float(phi_p(jnp.float64(x * 1.1), p))
+        assert (g - f) * np.sign(x) >= -1e-9    # monotone increasing
+
+
+@settings(max_examples=30, deadline=None)
+@given(p=st.floats(min_value=1.05, max_value=2.0),
+       eps=st.floats(min_value=1e-12, max_value=1e-4))
+def test_phi_prime_nonnegative(p, eps):
+    xs = jnp.linspace(-5, 5, 101, dtype=jnp.float64)
+    d = PHI.phi_prime(xs, p, eps)
+    assert float(jnp.min(d)) >= 0.0             # smoothed phi' must be >= 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(perm_seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_rcut_invariant_under_label_permutation(perm_seed):
+    W, truth = ring_of_cliques(4, 6)
+    rng = np.random.default_rng(perm_seed)
+    perm = rng.permutation(4)
+    relabeled = perm[truth]
+    a = float(metrics.rcut(W, truth, 4))
+    b = float(metrics.rcut(W, relabeled, 4))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_spmv_linearity(seed):
+    import scipy.sparse as sp
+    rng = np.random.default_rng(seed)
+    A = sp.random(24, 24, density=0.2,
+                  random_state=np.random.RandomState(seed % 1000))
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    x = rng.standard_normal(24)
+    y = rng.standard_normal(24)
+    a, b = rng.standard_normal(2)
+    lhs = np.asarray(mxv(M, jnp.asarray(a * x + b * y)))
+    rhs = a * np.asarray(mxv(M, jnp.asarray(x))) \
+        + b * np.asarray(mxv(M, jnp.asarray(y)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_boolean_ring_is_reachability(seed):
+    import scipy.sparse as sp
+    A = sp.random(16, 16, density=0.15,
+                  random_state=np.random.RandomState(seed % 997))
+    M = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    x = np.zeros(16, bool)
+    x[seed % 16] = True
+    got = np.asarray(mxv(M, jnp.asarray(x), boolean_ring))
+    want = (A.toarray() != 0) @ x
+    np.testing.assert_array_equal(got, want.astype(bool))
+
+
+def test_kmeans_inertia_decreases():
+    from repro.core.kmeans import lloyd, pairwise_sqdist
+    import jax
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((120, 3)), jnp.float32)
+    C0 = X[:4]
+    i_prev = None
+    for iters in (1, 3, 10, 30):
+        _, C, inertia = lloyd(X, C0, iters=iters)
+        if i_prev is not None:
+            assert float(inertia) <= i_prev + 1e-5
+        i_prev = float(inertia)

@@ -1,0 +1,53 @@
+"""End-to-end GrB-pGrass: recovers planted clusters and improves RCut
+over the p=2 baseline (the paper's Table I claim, on small graphs)."""
+import numpy as np
+import pytest
+
+from repro.core import PSCConfig, p_spectral_cluster, spectral_cluster, metrics
+from repro.graphs import ring_of_cliques, gaussian_blobs_knn, sbm_graph
+
+
+def test_ring_of_cliques_perfect_recovery():
+    W, truth = ring_of_cliques(4, 10)
+    cfg = PSCConfig(k=4, p_target=1.4, newton_iters=15, tcg_iters=10,
+                    kmeans_restarts=4, seed=0)
+    res = p_spectral_cluster(W, cfg)
+    acc = metrics.clustering_accuracy(res.labels, truth, 4)
+    assert acc == 1.0, f"accuracy {acc}"
+
+
+def test_blobs_high_accuracy():
+    W, truth = gaussian_blobs_knn(25, 4, seed=2)
+    cfg = PSCConfig(k=4, p_target=1.3, newton_iters=15, tcg_iters=10, seed=1)
+    res = p_spectral_cluster(W, cfg)
+    acc = metrics.clustering_accuracy(res.labels, truth, 4)
+    assert acc >= 0.95, f"accuracy {acc}"
+
+
+def test_pgrass_rcut_not_worse_than_spec():
+    """Table I analog: GrB-pGrass RCut <= Spec RCut (it minimizes it)."""
+    W, _ = sbm_graph([30, 30, 30, 30], p_in=0.5, p_out=0.03, seed=5)
+    cfg = PSCConfig(k=4, p_target=1.2, newton_iters=20, tcg_iters=15, seed=0)
+    res = p_spectral_cluster(W, cfg)
+    assert np.isfinite(res.rcut)
+    # continuation starts exactly from the Spec solution; the nonlinear
+    # refinement must not lose quality
+    assert res.rcut <= res.init_rcut * 1.01 + 1e-9, \
+        f"pGrass {res.rcut} vs Spec {res.init_rcut}"
+
+
+def test_fp_decreases_along_continuation():
+    W, _ = ring_of_cliques(3, 8)
+    cfg = PSCConfig(k=3, p_target=1.5, newton_iters=10, tcg_iters=8, seed=0)
+    res = p_spectral_cluster(W, cfg)
+    assert len(res.p_path) >= 2
+    assert all(np.isfinite(v) for v in res.fvals)
+    assert all(h > 0 for h in res.hvp_counts)
+
+
+def test_orthonormality_preserved():
+    W, _ = ring_of_cliques(3, 8)
+    cfg = PSCConfig(k=3, p_target=1.5, newton_iters=10, tcg_iters=8, seed=0)
+    res = p_spectral_cluster(W, cfg)
+    G = np.asarray(res.U.T @ res.U)
+    np.testing.assert_allclose(G, np.eye(3), atol=1e-5)  # f32 QR precision

@@ -1,0 +1,16 @@
+PY ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
+
+.PHONY: verify imports test dryrun-smoke
+
+# Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
+verify: imports test
+
+imports:
+	$(PY) -m pytest -x -q tests/test_imports.py
+
+test:
+	$(PY) -m pytest -x -q
+
+dryrun-smoke:
+	$(PY) -m pytest -x -q tests/test_dryrun_smoke.py

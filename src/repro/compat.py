@@ -1,0 +1,58 @@
+"""Version-tolerant wrappers over jax APIs that moved between releases.
+
+The CI image pins jax 0.4.37; newer trees expose ``jax.shard_map`` /
+``check_vma`` while 0.4.x has ``jax.experimental.shard_map.shard_map``
+/ ``check_rep``.  Every call site in this repo imports from here so a
+jax upgrade (or downgrade) is a one-file change.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):                        # jax >= 0.6
+    _shard_map = jax.shard_map
+else:                                                # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+    """``jax.shard_map`` with the replication-check kwarg normalised.
+
+    ``check_vma`` (new name) and ``check_rep`` (0.4.x name) control the
+    same static replication check; pass ``check_vma`` here and it is
+    forwarded under whichever spelling the installed jax accepts.
+    """
+    if check_vma is not None:
+        key = "check_vma" if "check_vma" in _SM_PARAMS else "check_rep"
+        kwargs.setdefault(key, check_vma)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kwargs)
+
+
+def tree_flatten_with_path(tree, is_leaf=None):
+    """``jax.tree.flatten_with_path`` (>= 0.4.38) / tree_util fallback."""
+    if hasattr(jax.tree, "flatten_with_path"):
+        return jax.tree.flatten_with_path(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+def tpu_compiler_params(**kwargs):
+    """``pltpu.CompilerParams`` (new name) / ``TPUCompilerParams`` (0.4.x)."""
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` (>= 0.4.35) with a manual fallback."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    import numpy as np
+    from jax.sharding import Mesh
+    n = int(np.prod(axis_shapes))
+    devices = np.asarray(jax.devices()[:n]).reshape(tuple(axis_shapes))
+    return Mesh(devices, tuple(axis_names))

@@ -1,0 +1,17 @@
+"""Distributed substrate: logical-axis sharding rules and gradient
+compression.  grblas/dist.py (shard_map SpMM) predates this package and
+stays in repro.grblas; model/launch/train sharding lives here."""
+from repro.dist.sharding import (AxisRules, DEFAULT_RULES, DP_RULES,
+                                 active_rules, constrain, logical_to_mesh,
+                                 named_sharding, resolve_spec, rules_for,
+                                 set_active_rules, use_rules)
+from repro.dist.compression import (compressed_psum_tree, dequantize_int8,
+                                    init_error_feedback, quantize_int8)
+
+__all__ = [
+    "AxisRules", "DEFAULT_RULES", "DP_RULES", "active_rules", "constrain",
+    "logical_to_mesh", "named_sharding", "resolve_spec", "rules_for",
+    "set_active_rules", "use_rules",
+    "compressed_psum_tree", "dequantize_int8", "init_error_feedback",
+    "quantize_int8",
+]

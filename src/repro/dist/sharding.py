@@ -1,0 +1,234 @@
+"""Logical-axis sharding registry: the single source of truth mapping
+logical tensor axes ("embed", "heads", "batch", ...) to physical mesh
+axes ("pod", "data", "model").
+
+Every PartitionSpec in the repo — param trees in models/layers.py,
+activation constraints in models/model.py / attention.py, batch and
+cache shardings in launch/dryrun.py — is derived from one ``AxisRules``
+table through ``resolve_spec``, so a profile change (serving TP vs.
+pure-DP training) is a one-table swap via ``set_active_rules`` and can
+never leave two call sites disagreeing.
+
+Resolution semantics (``resolve_spec``):
+  * each logical name maps to an ordered tuple of *candidate* mesh axes;
+  * candidates absent from the mesh are skipped (the same table works
+    for single-pod ``(data, model)`` and multi-pod ``(pod, data, model)``
+    meshes);
+  * a mesh axis is consumed at most once per spec (PartitionSpec cannot
+    repeat an axis), earlier dims win;
+  * a candidate whose size does not divide the remaining dim extent is
+    skipped — the divisibility fallback that degrades to partial or
+    fully replicated layouts instead of erroring (e.g. 6 kv heads on a
+    16-wide model axis stay replicated).
+"""
+from __future__ import annotations
+
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+AxisCandidates = Union[str, Sequence[str], None]
+
+
+class AxisRules:
+    """Immutable ordered table: logical axis name -> candidate mesh axes."""
+
+    def __init__(self, rules: Mapping[str, AxisCandidates]):
+        table = {}
+        for name, cand in dict(rules).items():
+            if cand is None:
+                table[name] = ()
+            elif isinstance(cand, str):
+                table[name] = (cand,)
+            else:
+                table[name] = tuple(cand)
+        self._table = table
+
+    def get(self, name: Optional[str]) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        return self._table.get(name, ())
+
+    def extend(self, **updates: AxisCandidates) -> "AxisRules":
+        """New table with ``updates`` merged over this one."""
+        merged = dict(self._table)
+        merged.update(updates)
+        return AxisRules(merged)
+
+    def items(self):
+        return self._table.items()
+
+    def __contains__(self, name):
+        return name in self._table
+
+    def __eq__(self, other):
+        return isinstance(other, AxisRules) and self._table == other._table
+
+    def __hash__(self):
+        return hash(tuple(sorted((k, v) for k, v in self._table.items())))
+
+    def __repr__(self):
+        body = ", ".join(f"{k}={v}" for k, v in self._table.items())
+        return f"AxisRules({body})"
+
+
+# Serving / tensor-parallel profile: weights and caches split over
+# ``model``, batch over ``data`` (and ``pod`` when present), sequence
+# parallelism between blocks on ``model``.
+DEFAULT_RULES = AxisRules({
+    # activations
+    "batch": ("pod", "data"),
+    "attn_batch": ("pod", "data", "model"),   # heads not shardable: spread B
+    "seq": None,
+    "seq_sp": ("model",),                     # inter-block sequence parallel
+    # params
+    "embed": None,
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "latent": None,
+    "experts": ("model",),
+    "vocab": ("model",),
+    "layers": None,                           # scan axis, never sharded
+    "conv": None,
+    # decode caches
+    "cache_batch": ("pod", "data"),
+    "cache_seq": ("model",),                  # flash-decoding seq shards
+})
+
+# Pure data-parallel profile for models small enough to replicate:
+# params replicated, the batch spread over every mesh axis.  Used for
+# small-model train/prefill cells where TP collectives would dominate.
+DP_RULES = AxisRules({
+    "batch": ("pod", "data", "model"),
+    "attn_batch": ("pod", "data", "model"),
+    "seq": None,
+    "seq_sp": None,
+    "embed": None,
+    "mlp": None,
+    "heads": None,
+    "kv": None,
+    "latent": None,
+    "experts": ("model",),                    # EP stays: dispatch is local
+    "vocab": None,
+    "layers": None,
+    "conv": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": ("model",),
+})
+
+# Params above this count cannot replicate per device: use the TP table.
+DP_PARAM_THRESHOLD = 10e9
+
+
+def rules_for(n_params: float,
+              threshold: float = DP_PARAM_THRESHOLD) -> AxisRules:
+    """Train/prefill rule table by parameter count: small models take
+    the pure-DP profile, large ones the tensor-parallel DEFAULT_RULES.
+    (Decode keeps DEFAULT_RULES regardless — a replicated 32k-deep KV
+    cache per device is never affordable; see launch/dryrun.py.)"""
+    return DP_RULES if n_params < threshold else DEFAULT_RULES
+
+
+_ACTIVE_RULES = DEFAULT_RULES
+
+
+def active_rules() -> AxisRules:
+    """The process-wide rule table used when no explicit table is passed."""
+    return _ACTIVE_RULES
+
+
+def set_active_rules(rules: AxisRules) -> AxisRules:
+    """Install ``rules`` as the active table; returns the previous one."""
+    global _ACTIVE_RULES
+    assert isinstance(rules, AxisRules), rules
+    prev = _ACTIVE_RULES
+    _ACTIVE_RULES = rules
+    return prev
+
+
+class use_rules:
+    """Context manager: ``with use_rules(DP_RULES): ...`` scopes a table."""
+
+    def __init__(self, rules: AxisRules):
+        self._rules = rules
+
+    def __enter__(self):
+        self._prev = set_active_rules(self._rules)
+        return self._rules
+
+    def __exit__(self, *exc):
+        set_active_rules(self._prev)
+        return False
+
+
+def logical_to_mesh(logical: Sequence[Optional[str]], mesh,
+                    rules: Optional[AxisRules] = None) -> Tuple:
+    """Map logical names to mesh-axis assignments (no shape knowledge:
+    divisibility is NOT checked — use resolve_spec for a final spec).
+
+    Returns one entry per logical name: None, a mesh axis, or a tuple
+    of mesh axes.  Mesh axes are consumed left-to-right at most once.
+    """
+    rules = rules or active_rules()
+    mesh_axes = dict(mesh.shape)
+    used = set()
+    out = []
+    for name in logical:
+        picked = []
+        for cand in rules.get(name):
+            if cand in mesh_axes and cand not in used:
+                picked.append(cand)
+                used.add(cand)
+        out.append(None if not picked
+                   else (picked[0] if len(picked) == 1 else tuple(picked)))
+    return tuple(out)
+
+
+def resolve_spec(shape: Sequence[int], logical: Sequence[Optional[str]],
+                 mesh, rules: Optional[AxisRules] = None) -> P:
+    """Resolve (shape, logical axes) to a PartitionSpec for ``mesh``.
+
+    Greedy per-dim assignment with the divisibility fallback described
+    in the module docstring; axes of size 1 are skipped (they partition
+    nothing and would block reuse elsewhere).
+    """
+    assert len(shape) == len(logical), (shape, logical)
+    rules = rules or active_rules()
+    mesh_axes = dict(mesh.shape)
+    used = set()
+    entries = []
+    for extent, name in zip(shape, logical):
+        picked = []
+        remaining = int(extent)
+        for cand in rules.get(name):
+            size = mesh_axes.get(cand)
+            if size is None or size <= 1 or cand in used:
+                continue
+            if remaining % size != 0:
+                continue                      # divisibility fallback
+            picked.append(cand)
+            used.add(cand)
+            remaining //= size
+        entries.append(None if not picked
+                       else (picked[0] if len(picked) == 1
+                             else tuple(picked)))
+    while entries and entries[-1] is None:    # trim trailing replication
+        entries.pop()
+    return P(*entries)
+
+
+def named_sharding(shape, logical, mesh,
+                   rules: Optional[AxisRules] = None) -> NamedSharding:
+    return NamedSharding(mesh, resolve_spec(shape, logical, mesh, rules))
+
+
+def constrain(x, mesh, logical: Sequence[Optional[str]],
+              rules: Optional[AxisRules] = None):
+    """with_sharding_constraint under the logical-axis naming; identity
+    when mesh is None (CPU / single-device tests)."""
+    if mesh is None:
+        return x
+    spec = resolve_spec(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -21,8 +21,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.grblas.containers import SparseMatrix
 from repro.grblas.semiring import Semiring, EdgeSemiring, reals_ring
 

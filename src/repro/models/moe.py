@@ -29,8 +29,8 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.models.config import ArchConfig
 from repro.models import layers as L
 from repro.models.layers import PAb

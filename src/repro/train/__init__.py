@@ -1,10 +1,12 @@
 from repro.train.optimizer import adamw, adafactor, get_optimizer, Optimizer
-from repro.train.loop import TrainConfig, make_train_step, lr_schedule, make_optimizer
+from repro.train.loop import (TrainConfig, make_train_step, lr_schedule,
+                              make_optimizer, init_compression_state)
 from repro.train.checkpoint import CheckpointManager
 from repro.train.fault_tolerance import (
     PreemptionGuard, StepWatchdog, run_with_restarts)
 
 __all__ = ["adamw", "adafactor", "get_optimizer", "Optimizer",
            "TrainConfig", "make_train_step", "lr_schedule", "make_optimizer",
+           "init_compression_state",
            "CheckpointManager", "PreemptionGuard", "StepWatchdog",
            "run_with_restarts"]

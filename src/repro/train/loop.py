@@ -30,6 +30,8 @@ class TrainConfig:
     microbatch: int = 1          # grad-accumulation factor
     aux_weight: float = 0.01     # MoE load-balance loss weight
     weight_decay: float = 0.1
+    grad_compression: str = "none"   # none | int8 (error-feedback psum)
+    compression_axis: str = "data"   # mesh axis the compressed psum crosses
 
 
 def lr_schedule(tc: TrainConfig, step):
@@ -87,8 +89,7 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, mesh=None,
         g = jax.tree.map(lambda x: x * inv, g)
         return loss * inv, nll * inv, aux * inv, g
 
-    def train_step(params, opt_state, batch):
-        loss, nll, aux, grads = grads_of(params, batch)
+    def finish_step(grads, opt_state, params, loss, nll, aux):
         grads, gnorm = OPT.clip_by_global_norm(grads, tc.clip_norm)
         step_no = (opt_state.count if hasattr(opt_state, "count")
                    else jnp.zeros((), jnp.int32))
@@ -98,4 +99,38 @@ def make_train_step(cfg: ArchConfig, tc: TrainConfig, mesh=None,
                    "grad_norm": gnorm, "lr": lr}
         return params, opt_state, metrics
 
+    if tc.grad_compression == "int8":
+        # Error-feedback int8 gradient psum (repro.dist.compression):
+        # the residual state rides as an extra step argument, so the
+        # compressed step is (params, opt_state, err, batch) ->
+        # (params, opt_state, err, metrics).  Seed err with
+        # init_compression_state(params).
+        from repro.dist.compression import compressed_psum_tree
+        if mesh is None:
+            raise ValueError("grad_compression='int8' needs a mesh "
+                             "(the psum axis lives on it)")
+
+        def train_step(params, opt_state, err, batch):
+            loss, nll, aux, grads = grads_of(params, batch)
+            grads, err = compressed_psum_tree(grads, err, mesh,
+                                              tc.compression_axis)
+            params, opt_state, metrics = finish_step(
+                grads, opt_state, params, loss, nll, aux)
+            return params, opt_state, err, metrics
+
+        return train_step
+    if tc.grad_compression != "none":
+        raise ValueError(f"unknown grad_compression "
+                         f"{tc.grad_compression!r}; use 'none' or 'int8'")
+
+    def train_step(params, opt_state, batch):
+        loss, nll, aux, grads = grads_of(params, batch)
+        return finish_step(grads, opt_state, params, loss, nll, aux)
+
     return train_step
+
+
+def init_compression_state(params):
+    """Zero error-feedback residuals for a grad_compression='int8' step."""
+    from repro.dist.compression import init_error_feedback
+    return init_error_feedback(params)

@@ -2,6 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not in the pinned CI image")
 from hypothesis import given, settings, strategies as st
 
 from repro.grblas import (SparseMatrix, mxv, reals_ring, min_plus_ring,

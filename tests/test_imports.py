@@ -1,0 +1,35 @@
+"""Import health: every module under src/repro must import cleanly.
+
+One bad import used to poison collection of all 11 tier-1 test modules
+(jax-0.4.37 API drift in grblas/dist.py plus a missing repro.dist
+package); this walk makes any regression show up as exactly one
+parametrized failure naming the broken module.
+"""
+import importlib
+import pkgutil
+
+import jax
+import pytest
+
+import repro
+
+# Initialize the backend before importing modules that append XLA_FLAGS
+# for subprocess use (repro.launch.dryrun): once the backend exists,
+# later env mutations cannot re-shape this process's device set.
+jax.devices()
+
+ALL_MODULES = sorted(
+    m.name for m in pkgutil.walk_packages(repro.__path__, prefix="repro."))
+
+
+def test_walk_found_the_tree():
+    assert len(ALL_MODULES) > 50, ALL_MODULES
+    for expected in ("repro.dist.sharding", "repro.dist.compression",
+                     "repro.grblas.dist", "repro.models.layers",
+                     "repro.launch.dryrun", "repro.compat"):
+        assert expected in ALL_MODULES
+
+
+@pytest.mark.parametrize("name", ALL_MODULES)
+def test_import(name):
+    importlib.import_module(name)

@@ -19,11 +19,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.graphs import delaunay_graph
-from repro.grblas import mxm, plap_edge_semiring
+from repro.grblas import mxm, Descriptor, plap_edge_semiring
 from repro.core import plap
 from repro.core.kmeans import assign as km_assign
 
 K = 4
+_DESC = Descriptor(backend="auto")
 
 
 def _time(f, *args, reps=5):
@@ -45,9 +46,11 @@ def run(rs=(10, 12, 14)):
         eta = jnp.asarray(rng.standard_normal((n, K)), jnp.float32)
         C = jnp.asarray(rng.standard_normal((K, K)), jnp.float32)
 
-        spmm = jax.jit(lambda u: mxm(W, u))
-        plap_f = jax.jit(lambda u: mxm(W, u, plap_edge_semiring(1.4, 1e-8)))
-        hvp = jax.jit(lambda u, e: plap.hess_eta_matrix_free(W, u, e, 1.4))
+        spmm = jax.jit(lambda u: mxm(W, u, desc=_DESC))
+        plap_f = jax.jit(lambda u: mxm(W, u, plap_edge_semiring(1.4, 1e-8),
+                                       desc=_DESC))
+        hvp = jax.jit(lambda u, e: plap.hess_eta_matrix_free(W, u, e, 1.4,
+                                                             desc=_DESC))
         kma = jax.jit(lambda u, c: km_assign(u, c))
 
         rows.append({

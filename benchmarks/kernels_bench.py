@@ -1,18 +1,27 @@
 """Kernel microbenchmarks: jnp/XLA-CPU wall time of each kernel's ref
 path (us/call) + the BSR fill ratio the TPU kernel would pay.
-(Pallas interpret-mode timing is not meaningful; TPU wall time comes
-from the roofline analysis.)"""
+(Pallas interpret-mode timing is not meaningful as a device proxy; the
+bsr-interpret row below is recorded only so the backend-descriptor
+trajectory has every dispatch path on it.  TPU wall time comes from the
+roofline analysis.)
+
+Also sweeps the unified-API backend descriptor (coo / ell /
+bsr_pallas-ref / bsr_pallas-interpret / edge coo vs ref) on one
+synthetic graph and emits BENCH_backends.json at the repo root so later
+PRs have a perf trajectory for the dispatch table.
+"""
 from __future__ import annotations
 
+import json
 import time
+from pathlib import Path
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
 from repro.graphs import delaunay_graph
-from repro.kernels.bsr_spmm import bsr_spmm
-from repro.kernels.plap_edge import plap_apply
+from repro.grblas import Descriptor, mxm, plap_edge_semiring
 from repro.kernels.kmeans_assign import kmeans_assign
 from repro.kernels.flash_attention import flash_attention
 
@@ -27,23 +36,63 @@ def _time(f, *a, reps=5):
     return (time.time() - t0) / reps * 1e6
 
 
+def sweep_backends(r=10, k=4, out_path=None):
+    """Time one SpMM per backend descriptor on a delaunay graph."""
+    W, _ = delaunay_graph(r, seed=0, build_bsr=True, block_size=128)
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.standard_normal((W.n_rows, k)), jnp.float32)
+    ring = plap_edge_semiring(1.4, 1e-8)
+
+    cases = [
+        ("reals", "coo", Descriptor(backend="coo")),
+        ("reals", "ell", Descriptor(backend="ell")),
+        ("reals", "bsr_ref", Descriptor(backend="bsr_pallas")),
+        ("reals", "bsr_interpret",
+         Descriptor(backend="bsr_pallas", interpret=True)),
+        ("plap_edge", "coo", Descriptor(backend="coo")),
+        ("plap_edge", "edge_ref", Descriptor(backend="edge_pallas")),
+    ]
+    entries = []
+    for ring_name, label, desc in cases:
+        rg = ring if ring_name == "plap_edge" else None
+        if rg is None:
+            fn = jax.jit(lambda u, d=desc: mxm(W, u, desc=d))
+        else:
+            fn = jax.jit(lambda u, d=desc: mxm(W, u, rg, desc=d))
+        reps = 2 if "interpret" in label else 5
+        us = _time(fn, X, reps=reps)
+        entries.append({"ring": ring_name, "backend": label,
+                        "wall_us": round(us, 1)})
+    payload = {
+        "graph": f"delaunay_r{r}", "n": W.n_rows, "nnz": W.nnz, "k": k,
+        "fill_ratio": round(W.fill_ratio, 2),
+        "platform": jax.default_backend(),
+        "entries": entries,
+    }
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
 def main(csv=True):
     lines = []
     W, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=128)
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.standard_normal((W.n_rows, 4)), jnp.float32)
+    bsr_ref = Descriptor(backend="bsr_pallas")      # jnp blocked ref on CPU
 
     lines.append(f"kernel_bsr_spmm_del12,"
-                 f"{_time(lambda x: bsr_spmm(W, x, use_pallas=False), X):.0f},"
+                 f"{_time(lambda x: mxm(W, x, desc=bsr_ref), X):.0f},"
                  f"fill_ratio={W.fill_ratio:.1f}")
     # BSR block-size sweep (EXPERIMENTS.md §Perf-kernels): fill ratio is
     # the HBM-roofline cost multiplier of the MXU-native layout
     for bs in (8, 16, 32, 64):
         Wb, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=bs)
         lines.append(f"kernel_bsr_fill_bs{bs},0,fill_ratio={Wb.fill_ratio:.1f}")
-    lines.append(f"kernel_plap_edge_del12,"
-                 f"{_time(lambda x: plap_apply(W, x, 1.4, use_pallas=False), X):.0f},"
-                 f"nnz={W.nnz}")
+    lines.append(
+        f"kernel_plap_edge_del12,"
+        f"{_time(lambda x: mxm(W, x, plap_edge_semiring(1.4, 1e-9), desc=Descriptor(backend='edge_pallas')), X):.0f},"
+        f"nnz={W.nnz}")
     C = jnp.asarray(rng.standard_normal((16, 4)), jnp.float32)
     lines.append(f"kernel_kmeans_assign_n{W.n_rows},"
                  f"{_time(lambda: kmeans_assign(X, C, use_pallas=False)):.0f},"
@@ -53,6 +102,12 @@ def main(csv=True):
     lines.append(f"kernel_flash_gqa_s1024,"
                  f"{_time(lambda: flash_attention(q, k, k, use_pallas=False)):.0f},"
                  f"hq=8_hkv=2")
+
+    bench = sweep_backends(
+        out_path=Path(__file__).resolve().parent.parent / "BENCH_backends.json")
+    for e in bench["entries"]:
+        lines.append(f"backend_{e['ring']}_{e['backend']}_del10,"
+                     f"{e['wall_us']:.0f},n={bench['n']}")
     if csv:
         for line in lines:
             print(line)

@@ -21,8 +21,12 @@ def main():
     labels_spec, rcut_spec = spectral_cluster(W, k=4, seed=0)
     acc_spec = metrics.clustering_accuracy(labels_spec, truth, 4)
 
-    # GrB-pGrass: p-continuation 2.0 -> 1.2 on the Grassmann manifold
-    cfg = PSCConfig(k=4, p_target=1.2, hvp_mode="graphblas", seed=0)
+    # GrB-pGrass: p-continuation 2.0 -> 1.2 on the Grassmann manifold.
+    # backend="auto" routes every SpMM-shaped op through the unified
+    # grblas execution API: ELL/COO gather paths here on CPU, the fused
+    # Pallas BSR kernels on TPU, "dist" once a mesh is supplied.
+    cfg = PSCConfig(k=4, p_target=1.2, hvp_mode="graphblas", seed=0,
+                    backend="auto")
     res = p_spectral_cluster(W, cfg)
     acc_p = metrics.clustering_accuracy(res.labels, truth, 4)
 

@@ -17,22 +17,28 @@ import jax
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
-from repro.grblas import ops as grb
+from repro.grblas import api
+from repro.grblas.api import Descriptor
 
 
-def laplacian_matvec(W: SparseMatrix, normalized: bool = False) -> Callable:
-    """Returns X -> L X with L = D - W (or I - D^-1/2 W D^-1/2)."""
+def laplacian_matvec(W: SparseMatrix, normalized: bool = False,
+                     desc: Optional[Descriptor] = None) -> Callable:
+    """Returns X -> L X with L = D - W (or I - D^-1/2 W D^-1/2).
+
+    The inner SpMM routes through the unified API; ``desc`` selects the
+    backend (auto: ELL/COO on CPU, Pallas BSR on TPU, dist with a mesh).
+    """
     deg = W.row_sums()
     if normalized:
         dinv = jnp.where(deg > 0, jax.lax.rsqrt(jnp.maximum(deg, 1e-12)), 0.0)
 
         def mv(X):
             DX = dinv[:, None] * X if X.ndim == 2 else dinv * X
-            WX = grb.mxm(W, DX)
+            WX = api.mxm(W, DX, desc=desc)
             return X - (dinv[:, None] * WX if X.ndim == 2 else dinv * WX)
     else:
         def mv(X):
-            WX = grb.mxm(W, X)
+            WX = api.mxm(W, X, desc=desc)
             return (deg[:, None] * X if X.ndim == 2 else deg * X) - WX
     return mv
 
@@ -95,8 +101,13 @@ def lobpcg(matvec: Callable, X0: jnp.ndarray, k: int,
 
 def smallest_eigvecs(W: SparseMatrix, k: int, normalized: bool = False,
                      seed: int = 0, max_iters: int = 200,
-                     tol: float = 1e-6) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Smallest-k eigenpairs of the graph Laplacian of W."""
+                     tol: float = 1e-6,
+                     desc: Optional[Descriptor] = None
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Smallest-k eigenpairs of the graph Laplacian of W.
+
+    ``desc`` steers the inner Laplacian SpMM (must be a backend capable
+    of the reals ring; the tiny-graph dense-eigh path ignores it)."""
     n = W.n_rows
     if n <= 1024:  # dense exact path for tiny graphs
         L = jnp.diag(W.row_sums()) - W.to_dense()
@@ -106,7 +117,7 @@ def smallest_eigvecs(W: SparseMatrix, k: int, normalized: bool = False,
             L = dih[:, None] * L * dih[None, :]
         evals, evecs = jnp.linalg.eigh(L)
         return evals[:k], evecs[:, :k]
-    mv = laplacian_matvec(W, normalized)
+    mv = laplacian_matvec(W, normalized, desc=desc)
     m = min(max(2 * k, k + 4), n)
     key = jax.random.PRNGKey(seed)
     X0 = jax.random.normal(key, (n, m), jnp.float32)

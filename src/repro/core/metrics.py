@@ -10,6 +10,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
+from repro.grblas import api
+from repro.grblas.api import Descriptor
+
+# the indicator SpMM is tiny and COO-exact; keep the reference backend so
+# cut metrics are bit-stable across layout availability
+_COO = Descriptor(backend="coo")
 
 
 def _indicator(labels: jnp.ndarray, k: int) -> jnp.ndarray:
@@ -17,10 +23,11 @@ def _indicator(labels: jnp.ndarray, k: int) -> jnp.ndarray:
 
 
 def cut_matrix(W: SparseMatrix, labels, k: int) -> jnp.ndarray:
-    """M[a,b] = sum of edge weights between cluster a and b (directed nnz)."""
+    """M[a,b] = sum of edge weights between cluster a and b (directed nnz);
+    one SpMM with the one-hot indicator multivector."""
     labels = jnp.asarray(labels)
     H = _indicator(labels, k)
-    WH = jax.ops.segment_sum(W.vals[:, None] * H[W.cols], W.rows, W.n_rows)
+    WH = api.mxm(W, H, desc=_COO)
     return H.T @ WH                                           # (k,k)
 
 

@@ -17,26 +17,36 @@ Closed forms (derived; pinned to jax autodiff in tests/test_plap.py):
     Hess F @ eta = (1/B) Hess A eta - (F/B) Hess B eta
                    - (1/B^2)[gA (gB.eta) + gB (gA.eta)] + (2F/B^2) gB (gB.eta)
 
+Every SpMM-shaped reduction routes through the unified GraphBLAS API
+(grblas.api.mxm) under a Descriptor — backend="auto" serves the Newton
+hot loop from the fused Pallas kernels when the BSR layout is built (on
+TPU), and the COO/ELL gather paths otherwise; there are no raw
+jax.ops.segment_sum calls left in the hot path.
+
 Two HVP implementations:
   * hess_eta_graphblas  — Algorithm-1-faithful: materialize D[l] and the
-    off-diagonal W-hat[l] (new vals on the fixed sparsity), then
-    vxm + eWiseApply per column (the paper's Alg. 1), plus the rank-one
-    quotient corrections as dot/axpy vector ops.
-  * hess_eta_matrix_free — TPU-adapted: one fused edge-semiring SpMM, no
-    W-hat materialization (DESIGN.md §2, adaptation 4).
+    off-diagonal W-hat[l] (multivalues on W's fixed pattern, via
+    W.with_vals), then mxm + eWiseApply per column (the paper's Alg. 1),
+    plus the rank-one quotient corrections as dot/axpy vector ops.
+  * hess_eta_matrix_free — TPU-adapted: one fused SpMM under the
+    pair-edge-semiring, no W-hat materialization (DESIGN.md §2,
+    adaptation 4).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
-import jax
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
+from repro.grblas import api
 from repro.grblas import ops as grb
-from repro.grblas.semiring import reals_ring
+from repro.grblas.api import Descriptor
+from repro.grblas.semiring import (plap_edge_semiring,
+                                   plap_hvp_edge_semiring, reals_ring)
 from repro.core import phi as PHI
+
+_AUTO = Descriptor()
 
 
 class PLapParts(NamedTuple):
@@ -52,30 +62,34 @@ def _edge_diffs(W: SparseMatrix, U: jnp.ndarray) -> jnp.ndarray:
     return U[W.rows] - U[W.cols]
 
 
-def parts(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float) -> PLapParts:
-    """All shared quantities for value/grad in one edge pass."""
+def parts(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float,
+          desc: Optional[Descriptor] = None) -> PLapParts:
+    """All shared quantities for value/grad: one edge pass for the scalar
+    energies + one edge-semiring SpMM for Delta_p u (the kernel-served op)."""
     d = _edge_diffs(W, U)                                    # (nnz, k)
     w = W.vals[:, None]
     A = 0.5 * jnp.sum(w * PHI.p_power(d, p, eps), axis=0)    # (k,)
     B = jnp.sum(PHI.p_power(U, p, eps), axis=0)              # (k,)
-    contrib = w * PHI.phi(d, p, eps)
-    dpu = jax.ops.segment_sum(contrib, W.rows, W.n_rows)     # (n,k)
+    dpu = api.mxm(W, U, plap_edge_semiring(p, eps), desc=desc or _AUTO)
     return PLapParts(A=A, B=B, F=A / B, dpu=dpu, phi_u=PHI.phi(U, p, eps))
 
 
-def value(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9) -> jnp.ndarray:
-    pr = parts(W, U, p, eps)
+def value(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9,
+          desc: Optional[Descriptor] = None) -> jnp.ndarray:
+    pr = parts(W, U, p, eps, desc)
     return jnp.sum(pr.F)
 
 
-def euc_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9) -> jnp.ndarray:
+def euc_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9,
+             desc: Optional[Descriptor] = None) -> jnp.ndarray:
     """EucGrad: (p/B)[Delta_p u - F phi(u)] columnwise. (n,k)."""
-    pr = parts(W, U, p, eps)
+    pr = parts(W, U, p, eps, desc)
     return (p / pr.B) * (pr.dpu - pr.F * pr.phi_u)
 
 
-def value_and_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9):
-    pr = parts(W, U, p, eps)
+def value_and_grad(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float = 1e-9,
+                   desc: Optional[Descriptor] = None):
+    pr = parts(W, U, p, eps, desc)
     g = (p / pr.B) * (pr.dpu - pr.F * pr.phi_u)
     return jnp.sum(pr.F), g
 
@@ -91,31 +105,35 @@ def hessian_weights(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
 def build_alg1_operands(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
     """The paper's Algorithm-1 inputs: per column l,
        D[l] = diag(Hess A^l) / p   (vector)  and
-       H[l] = off-diagonal W-hat^l (SparseMatrix vals on W's pattern).
-    Returned stacked over columns: D (n,k), What_vals (nnz,k)."""
+       H[l] = off-diagonal W-hat^l (multivalues on W's pattern).
+    Returned stacked over columns: D (n,k), What_vals (nnz,k).
+    D is the W-hat row sums — mxv with the ones multivector."""
     what = hessian_weights(W, U, p, eps)                     # (nnz,k)
-    D = jax.ops.segment_sum(what, W.rows, W.n_rows)          # (n,k) row sums
+    D = api.mxm(W.with_vals(what), jnp.ones_like(U), reals_ring)
     return D, what
 
 
 def hess_eta_graphblas(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
                        p: float, eps: float = 1e-9,
-                       operands=None) -> jnp.ndarray:
+                       operands=None,
+                       desc: Optional[Descriptor] = None) -> jnp.ndarray:
     """Algorithm-1-faithful HVP (materialized W-hat), full quotient rule.
 
     Per column l (all fused):
-      1. v  = vxm(eta, What[l], reals_ring)        [Alg.1 line 7]
+      1. v  = mxm(What[l], eta, reals_ring)        [Alg.1 line 7]
       2. w  = eWiseApply(eta, D[l], mul)           [Alg.1 line 8]
       3. hA = p * (w - v)                          [Alg.1 line 9 + scale]
     then the rank-one quotient corrections (vector dots / axpys).
+    The materialized multivalues always run the COO backend (with_vals
+    drops the derived layouts), so ``desc`` only steers ``parts``.
     """
-    pr = parts(W, U, p, eps)
+    pr = parts(W, U, p, eps, desc)
     if operands is None:
         operands = build_alg1_operands(W, U, p, eps)
     D, what_vals = operands
 
     # lines 6-9 of Algorithm 1, k columns fused through one SpMM:
-    v = jax.ops.segment_sum(what_vals * eta[W.cols], W.rows, W.n_rows)
+    v = api.mxm(W.with_vals(what_vals), eta, reals_ring)
     w = grb.e_wise_apply(eta, D, jnp.multiply)
     hA_eta = p * grb.e_wise_apply(w, v, jnp.subtract)        # Hess A @ eta
 
@@ -123,15 +141,16 @@ def hess_eta_graphblas(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
 
 
 def hess_eta_matrix_free(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
-                         p: float, eps: float = 1e-9) -> jnp.ndarray:
-    """TPU-adapted HVP: fused edge pass, nothing materialized.
-
-    Hess A @ eta per column = p * sum_j w-hat_ij (eta_i - eta_j)."""
-    pr = parts(W, U, p, eps)
-    d = _edge_diffs(W, U)
-    what = W.vals[:, None] * PHI.phi_prime(d, p, eps)
-    de = eta[W.rows] - eta[W.cols]
-    hA_eta = p * jax.ops.segment_sum(what * de, W.rows, W.n_rows)
+                         p: float, eps: float = 1e-9,
+                         desc: Optional[Descriptor] = None) -> jnp.ndarray:
+    """TPU-adapted HVP: one fused pair-edge-semiring SpMM, nothing
+    materialized.  Hess A @ eta per column
+        = p * sum_j w-hat_ij (eta_i - eta_j)
+    with w-hat computed per edge inside the ring (Pallas kernel when the
+    BSR layout is built on TPU; COO segment path otherwise)."""
+    pr = parts(W, U, p, eps, desc)
+    hA_eta = p * api.mxm(W, (U, eta), plap_hvp_edge_semiring(p, eps),
+                         desc=desc or _AUTO)
     return _quotient_correct(pr, U, eta, hA_eta, p, eps)
 
 
@@ -162,5 +181,6 @@ def autodiff_value(W: SparseMatrix, p: float, eps: float):
 
 
 def autodiff_hvp(W: SparseMatrix, U, eta, p: float, eps: float = 1e-9):
+    import jax
     f = autodiff_value(W, p, eps)
     return jax.jvp(jax.grad(f), (U,), (eta,))[1]

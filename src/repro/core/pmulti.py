@@ -15,14 +15,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
+from repro.grblas.api import Descriptor
 from repro.core import plap, kmeans as km, metrics, lobpcg
 
 
-def _minimize_single(W, u0, Uprev, p, eps, iters=300, lr0=0.5):
+def _minimize_single(W, u0, Uprev, p, eps, iters=300, lr0=0.5, desc=None):
     """Projected gradient descent with backtracking on one column."""
 
     def f(u):
-        return plap.value(W, u[:, None], p, eps)
+        return plap.value(W, u[:, None], p, eps, desc=desc)
 
     def project(u):
         if Uprev.shape[1] > 0:
@@ -31,7 +32,7 @@ def _minimize_single(W, u0, Uprev, p, eps, iters=300, lr0=0.5):
 
     @jax.jit
     def step(u, lr):
-        g = plap.euc_grad(W, u[:, None], p, eps)[:, 0]
+        g = plap.euc_grad(W, u[:, None], p, eps, desc=desc)[:, 0]
         # project gradient to the feasible tangent (orthogonality + sphere)
         if Uprev.shape[1] > 0:
             g = g - Uprev @ (Uprev.T @ g)
@@ -47,15 +48,24 @@ def _minimize_single(W, u0, Uprev, p, eps, iters=300, lr0=0.5):
 
 
 def p_multi(W: SparseMatrix, k: int, p: float = 1.2, eps: float = 1e-8,
-            seed: int = 0, iters: int = 200) -> Tuple[np.ndarray, float]:
-    """Sequential p-eigenvectors + kmeans. Returns (labels, rcut)."""
+            seed: int = 0, iters: int = 200,
+            desc: Descriptor | None = None) -> Tuple[np.ndarray, float]:
+    """Sequential p-eigenvectors + kmeans. Returns (labels, rcut).
+
+    ``desc`` selects the grblas backend for every inner SpMM (None =
+    platform auto; the p=2 initialization falls back to auto if the
+    named backend cannot run the reals ring)."""
+    from repro.grblas import api as grb_api
+
     n = W.n_rows
-    _, U2 = lobpcg.smallest_eigvecs(W, k, seed=seed)
+    _, U2 = lobpcg.smallest_eigvecs(
+        W, k, seed=seed, desc=grb_api.capable_desc(W, desc=desc, k=k))
     cols = []
     for l in range(k):
         Uprev = (jnp.stack(cols, axis=1) if cols
                  else jnp.zeros((n, 0), U2.dtype))
-        u = _minimize_single(W, U2[:, l], Uprev, p, eps, iters=iters)
+        u = _minimize_single(W, U2[:, l], Uprev, p, eps, iters=iters,
+                             desc=desc)
         cols.append(u)
     U = jnp.stack(cols, axis=1)
     Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)

@@ -22,6 +22,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
+from repro.grblas import api as grb_api
+from repro.grblas.api import Descriptor
 from repro.core import plap, kmeans as km, lobpcg, metrics
 from repro.core.grassmann import rtr_minimize, RTRResult
 
@@ -40,6 +42,35 @@ class PSCConfig:
     hvp_mode: str = "graphblas"     # "graphblas" (Alg.1) | "matrix_free"
     normalized_init: bool = False
     seed: int = 0
+    # grblas execution backend for the hot loop.  The hot loop issues
+    # edge-semiring ops, so the only named backends that can serve it are
+    # "coo" and (with the BSR layout built) "edge_pallas"; "auto" picks
+    # per platform.  Validated against the graph up front by
+    # p_spectral_cluster — a backend that cannot execute raises
+    # BackendUnavailableError before any work is done.
+    backend: str = "auto"
+    interpret: bool = False         # Pallas interpreter mode (numerics pin)
+
+    def descriptor(self) -> Descriptor:
+        return Descriptor(backend=self.backend, interpret=self.interpret)
+
+    def validate_backend(self, W: SparseMatrix) -> None:
+        """Shape-only capability probe: fail at config-application time,
+        not mid-Newton-iteration."""
+        desc = self.descriptor()
+        if desc.backend == "auto":
+            return
+        from repro.grblas import backends as _backends
+        from repro.grblas.semiring import (plap_edge_semiring,
+                                           plap_hvp_edge_semiring)
+
+        probe = jax.ShapeDtypeStruct((W.n_rows, self.k), jnp.float32)
+        _backends.select_backend(W, probe,
+                                 plap_edge_semiring(2.0, self.eps), desc)
+        if self.hvp_mode == "matrix_free":
+            _backends.select_backend(W, (probe, probe),
+                                     plap_hvp_edge_semiring(2.0, self.eps),
+                                     desc)
 
 
 @dataclasses.dataclass
@@ -56,23 +87,30 @@ class PSCResult:
 
 
 def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig) -> RTRResult:
-    f = lambda U: plap.value(W, U, p, cfg.eps)
-    g = lambda U: plap.euc_grad(W, U, p, cfg.eps)
+    desc = cfg.descriptor()
+    f = lambda U: plap.value(W, U, p, cfg.eps, desc=desc)
+    g = lambda U: plap.euc_grad(W, U, p, cfg.eps, desc=desc)
     if cfg.hvp_mode == "graphblas":
-        h = lambda U, eta: plap.hess_eta_graphblas(W, U, eta, p, cfg.eps)
+        h = lambda U, eta: plap.hess_eta_graphblas(W, U, eta, p, cfg.eps,
+                                                   desc=desc)
     else:
-        h = lambda U, eta: plap.hess_eta_matrix_free(W, U, eta, p, cfg.eps)
+        h = lambda U, eta: plap.hess_eta_matrix_free(W, U, eta, p, cfg.eps,
+                                                     desc=desc)
     return rtr_minimize(f, g, h, U0, max_iters=cfg.newton_iters,
                         tcg_iters=cfg.tcg_iters, grad_tol=cfg.grad_tol)
 
 
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     """Run the full GrB-pGrass pipeline on graph W."""
+    cfg.validate_backend(W)
     key = jax.random.PRNGKey(cfg.seed)
 
-    # -- stage 1: linear (p=2) spectral start
+    # -- stage 1: linear (p=2) spectral start.  The stage-1 matvec runs
+    # under the reals ring, so forward the configured descriptor only
+    # when that backend can serve it (edge_pallas is hot-loop-only).
+    stage1_desc = grb_api.capable_desc(W, desc=cfg.descriptor(), k=cfg.k)
     _, U = lobpcg.smallest_eigvecs(W, cfg.k, normalized=cfg.normalized_init,
-                                   seed=cfg.seed)
+                                   seed=cfg.seed, desc=stage1_desc)
     U = jnp.linalg.qr(U)[0]
     key, sub = jax.random.split(key)
     init_labels, _ = km.kmeans(sub, U, cfg.k, restarts=cfg.kmeans_restarts,

@@ -2,29 +2,53 @@
 
 Mirrors the C++ GraphBLAS concepts the paper builds on:
   * algebraic containers  -> SparseMatrix (CSR / padded-ELL / 128x128 BSR), dense jnp vectors
-  * algebraic operators   -> vxm / mxv / mxm (SpMV / SpMM under a semiring)
-  * algebraic relations   -> Semiring(add, mul, zero, one), plus the
-    edge-semiring extension used for the matrix-free p-Laplacian apply.
+  * algebraic operators   -> the unified execution API (api.mxm / mxv / vxm):
+    one SpMM signature whose Descriptor selects the backend — coo, ell,
+    bsr_pallas, edge_pallas, or dist — from the registry in backends.py
+  * algebraic relations   -> Semiring(add, mul, zero, one), the
+    edge-semiring extension for the matrix-free p-Laplacian apply, and
+    the pair-edge-semiring for the Newton HVP, with per-ring fast-path
+    registration (register_ring_fast_paths).
 
-The distributed layer (dist.py) maps the auto-parallelisation role of the
-C++ runtime onto shard_map over a device mesh.
+The distributed layer (dist.py) maps the auto-parallelisation role of
+the C++ runtime onto shard_map over a device mesh; it is the "dist"
+backend of the same mxm signature.  See DESIGN.md §3 for the API and
+the migration table from the old per-path entry points.
 """
 from repro.grblas.semiring import (
     Semiring,
     EdgeSemiring,
+    PairEdgeSemiring,
     reals_ring,
     min_plus_ring,
     max_times_ring,
     boolean_ring,
     plap_edge_semiring,
+    plap_hvp_edge_semiring,
+    register_ring_fast_paths,
+    fast_paths,
 )
 from repro.grblas.containers import SparseMatrix
-from repro.grblas.ops import vxm, mxv, mxm, e_wise_apply, apply, reduce as grb_reduce
-from repro.grblas.dist import dist_mxm, make_row_partition
+from repro.grblas.api import (
+    Descriptor,
+    BackendUnavailableError,
+    mxm,
+    mxv,
+    vxm,
+    available_backends,
+)
+from repro.grblas.backends import register_backend, registered_backends
+from repro.grblas.ops import e_wise_apply, apply, reduce as grb_reduce
+from repro.grblas.dist import dist_mxm, make_row_partition, shard_mxm
 
 __all__ = [
-    "Semiring", "EdgeSemiring", "reals_ring", "min_plus_ring",
-    "max_times_ring", "boolean_ring", "plap_edge_semiring",
-    "SparseMatrix", "vxm", "mxv", "mxm", "e_wise_apply", "apply",
-    "grb_reduce", "dist_mxm", "make_row_partition",
+    "Semiring", "EdgeSemiring", "PairEdgeSemiring", "reals_ring",
+    "min_plus_ring", "max_times_ring", "boolean_ring",
+    "plap_edge_semiring", "plap_hvp_edge_semiring",
+    "register_ring_fast_paths", "fast_paths",
+    "SparseMatrix", "Descriptor", "BackendUnavailableError",
+    "mxm", "mxv", "vxm", "available_backends",
+    "register_backend", "registered_backends",
+    "e_wise_apply", "apply", "grb_reduce",
+    "dist_mxm", "make_row_partition", "shard_mxm",
 ]

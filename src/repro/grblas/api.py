@@ -1,0 +1,127 @@
+"""Unified GraphBLAS execution API: descriptor-driven backend dispatch.
+
+One signature for every SpMM-shaped operation in the repo::
+
+    mxm(A, X, ring, *, mask=None, accum=None, desc=None)   # (n,k) or (n,)
+    mxv(A, x, ring, ...)                                   # alias of mxm
+    vxm(x, A, ring, ...)                                   # transposed mxm
+
+The ``Descriptor`` replaces the old scatter of ``use_ell`` /
+``use_pallas`` flags and parallel entry points (ops.mxm,
+kernels.bsr_spmm.bsr_spmm, kernels.plap_edge.plap_apply, dist.dist_mxm):
+
+    backend    "auto" | "coo" | "ell" | "bsr_pallas" | "edge_pallas" | "dist"
+    transpose  operate on A^T (COO index-role swap; vxm flips this)
+    interpret  run Pallas kernels in interpreter mode (CPU numerics pin)
+    mesh/axis  device mesh + axis name for the "dist" backend
+
+"auto" picks the first capable backend in platform-priority order
+(grblas.backends): Pallas kernels first on TPU, ELL/COO first on CPU,
+"dist" whenever a mesh is supplied.  A named backend that cannot execute
+the operands raises BackendUnavailableError instead of silently falling
+back — layout availability (ELL/BSR built?), ring kind, and multivector
+shape are all part of the capability check.
+
+Rings: a plain ``Semiring`` multiplies stored values with gathered
+multivector entries; an ``EdgeSemiring`` sees both endpoints (the
+p-Laplacian apply); a ``PairEdgeSemiring`` sees two multivectors —
+pass ``X=(U, Eta)`` — which is the matrix-free Newton HVP.  The Alg-1
+materialized path reuses the same API via
+``A.with_vals(what_vals)`` (per-column multivalues on A's pattern).
+
+Write semantics (GraphBLAS C⟨M⟩ ⊙= T, simplified to pure outputs):
+``accum=(op, C)`` returns op(C, T); ``mask`` (row mask or full-shape)
+keeps masked-in entries and writes the ring's add-identity — or, with
+accum, C's old value — elsewhere.  See DESIGN.md §3 for the migration
+table from the old entry points.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.grblas import backends as _backends
+from repro.grblas.semiring import reals_ring
+
+# re-exported for callers that catch dispatch failures
+BackendUnavailableError = _backends.BackendUnavailableError
+
+
+@dataclasses.dataclass(frozen=True)
+class Descriptor:
+    """How to execute one GraphBLAS operation (not what it computes)."""
+
+    backend: str = "auto"
+    transpose: bool = False
+    interpret: bool = False
+    mesh: Any = None
+    axis: str = "data"
+
+    def transposed(self) -> "Descriptor":
+        return dataclasses.replace(self, transpose=not self.transpose)
+
+
+DEFAULT_DESCRIPTOR = Descriptor()
+
+
+def mxm(A, X, ring=reals_ring, *, mask=None, accum=None,
+        desc: Optional[Descriptor] = None) -> jnp.ndarray:
+    """Sparse x dense multivector (SpMM) under ``ring``.
+
+    X: (n,) or (n, k) — or a pair (U, Eta) for a PairEdgeSemiring.
+    """
+    desc = DEFAULT_DESCRIPTOR if desc is None else desc
+    be = _backends.select_backend(A, X, ring, desc)
+    Y = be.execute(A, X, ring, desc)
+    return _finalize(Y, ring, mask, accum)
+
+
+def mxv(A, x, ring=reals_ring, *, mask=None, accum=None,
+        desc: Optional[Descriptor] = None) -> jnp.ndarray:
+    """y = A (*) x under ring — grb::mxv (the k=1 column of mxm)."""
+    return mxm(A, x, ring, mask=mask, accum=accum, desc=desc)
+
+
+def vxm(x, A, ring=reals_ring, *, mask=None, accum=None,
+        desc: Optional[Descriptor] = None) -> jnp.ndarray:
+    """y = x (*) A under ring — grb::vxm = mxm on A^T (descriptor flip)."""
+    desc = DEFAULT_DESCRIPTOR if desc is None else desc
+    return mxm(A, x, ring, mask=mask, accum=accum, desc=desc.transposed())
+
+
+def available_backends(A, X, ring=reals_ring,
+                       desc: Optional[Descriptor] = None) -> list:
+    """Introspection: which backends could run this op (priority order)."""
+    return _backends.available_backends(
+        A, X, ring, DEFAULT_DESCRIPTOR if desc is None else desc)
+
+
+def capable_desc(A, ring=reals_ring, desc: Optional[Descriptor] = None, *,
+                 k: int = 1, dtype=jnp.float32) -> Optional[Descriptor]:
+    """``desc`` if its backend can run an (n, k) multivector under
+    ``ring`` on A; None (= auto) otherwise.  Shape-only probe — lets a
+    descriptor pinned for one ring kind (e.g. the edge-semiring hot
+    loop) degrade gracefully where another ring is needed (e.g. the
+    reals-ring initialization)."""
+    if desc is None:
+        return None
+    probe = jax.ShapeDtypeStruct((A.n_rows, k), dtype)
+    return desc if _backends.can_execute(A, probe, ring, desc) else None
+
+
+def _finalize(Y, ring, mask, accum):
+    base = getattr(ring, "base", ring)  # edge rings reduce under base
+    if mask is not None:
+        mask = jnp.asarray(mask)
+        while mask.ndim < Y.ndim:      # row mask against a multivector
+            mask = mask[..., None]
+    if accum is not None:
+        op, C = accum
+        T = op(C, Y)
+        return jnp.where(mask, T, C) if mask is not None else T
+    if mask is not None:
+        return jnp.where(mask, Y, jnp.asarray(base.zero, Y.dtype))
+    return Y

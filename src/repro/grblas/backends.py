@@ -1,0 +1,386 @@
+"""Backend registry for the unified GraphBLAS execution API.
+
+Every SpMM-shaped operation in the repo flows through one table: a
+``Backend`` couples a capability predicate (can this implementation run
+this (container layout, ring kind, multivector shape, descriptor)
+combination at all?) with an execute function.  ``grblas.api.mxm``
+selects from the table — either the backend the Descriptor names
+(validated against the predicate, loud error otherwise) or, for
+``backend="auto"``, the first capable backend in platform-priority
+order.
+
+Registered backends (priority: lower = preferred under "auto"):
+
+  name         layout needed   rings                       cpu  tpu
+  dist         ELL / row-part  reals, edge (reals base)      0    0  (needs desc.mesh)
+  edge_pallas  BSR tiles       plap_apply / plap_hvp kinds  61   10
+  bsr_pallas   BSR tiles       reals                        60   11
+  ell          padded ELL      rings with a padded reducer  20   20
+  coo          COO (always)    any ring, transpose, multivals 30 30
+
+The Pallas kernels rank first on TPU and last on CPU: their jnp
+reference paths exist everywhere (and run under ``desc.interpret``),
+but on CPU the gather/segment formulations win.  ``dist`` outranks
+everything once a mesh is supplied — the caller asked for sharding.
+
+New hardware or layouts are one ``register_backend`` call, not a fifth
+parallel entry point (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.grblas.containers import SparseMatrix
+from repro.grblas.semiring import (
+    EdgeSemiring,
+    PairEdgeSemiring,
+    Semiring,
+    fast_paths,
+)
+
+
+class BackendUnavailableError(ValueError):
+    """The requested backend cannot execute this operand combination."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    supports: Callable      # (A, X, ring, desc) -> bool
+    execute: Callable       # (A, X, ring, desc) -> jnp.ndarray
+    cpu_priority: int       # auto-selection rank off-TPU (lower wins)
+    tpu_priority: int       # auto-selection rank on TPU
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(name: str, *, cpu_priority: int, tpu_priority: int,
+                     supports: Callable):
+    """Decorator: register ``fn`` as the execute hook of backend ``name``."""
+
+    def deco(fn):
+        _REGISTRY[name] = Backend(name=name, supports=supports, execute=fn,
+                                  cpu_priority=cpu_priority,
+                                  tpu_priority=tpu_priority)
+        return fn
+
+    return deco
+
+
+def registered_backends() -> Dict[str, Backend]:
+    return dict(_REGISTRY)
+
+
+def available_backends(A, X, ring, desc) -> list:
+    """Names of every backend capable of this operand combination."""
+    return [b.name for b in _ordered() if b.supports(A, X, ring, desc)]
+
+
+def can_execute(A, X, ring, desc) -> bool:
+    """Would select_backend succeed?  (Shape-only probe; X may be a
+    jax.ShapeDtypeStruct.)  Callers use this to fall back gracefully when
+    a descriptor pinned for one ring kind cannot serve another."""
+    if desc.backend == "auto":
+        return any(b.supports(A, X, ring, desc) for b in _ordered())
+    be = _REGISTRY.get(desc.backend)
+    return be is not None and be.supports(A, X, ring, desc)
+
+
+def _ordered():
+    on_tpu = jax.default_backend() == "tpu"
+    key = (lambda b: b.tpu_priority) if on_tpu else (lambda b: b.cpu_priority)
+    return sorted(_REGISTRY.values(), key=key)
+
+
+def select_backend(A, X, ring, desc) -> Backend:
+    """Resolve a Descriptor to one executable backend (or raise loudly)."""
+    if desc.backend != "auto":
+        be = _REGISTRY.get(desc.backend)
+        if be is None:
+            raise BackendUnavailableError(
+                f"unknown backend {desc.backend!r}; registered: "
+                f"{sorted(_REGISTRY)}")
+        if not be.supports(A, X, ring, desc):
+            raise BackendUnavailableError(
+                f"backend {desc.backend!r} cannot execute ring "
+                f"{getattr(ring, 'name', ring)!r} on this container "
+                f"(layout availability / ring kind / shape mismatch); "
+                f"capable backends: {available_backends(A, X, ring, desc)}")
+        return be
+    for be in _ordered():
+        if be.supports(A, X, ring, desc):
+            return be
+    raise BackendUnavailableError(
+        f"no registered backend supports ring "
+        f"{getattr(ring, 'name', ring)!r} with this container/descriptor")
+
+
+# ------------------------------------------------------------------ helpers
+
+def _is_pair(X) -> bool:
+    return isinstance(X, (tuple, list))
+
+
+def _broadcast_vals(vals, ndim):
+    """Lift (nnz,) values to (nnz, 1) against an (n, k) multivector;
+    (nnz, k) multivalues (containers.with_vals) pass through."""
+    if ndim == 2 and vals.ndim == 1:
+        return vals[:, None]
+    return vals
+
+
+def _square(A) -> bool:
+    return A.n_rows == A.n_cols
+
+
+# --------------------------------------------------------------- coo backend
+
+def _coo_supports(A, X, ring, desc):
+    if not isinstance(A, SparseMatrix):
+        return False
+    if isinstance(ring, PairEdgeSemiring):
+        return (_is_pair(X) and len(X) == 2 and _square(A)
+                and _vals_match(A, X[0]))
+    if isinstance(ring, EdgeSemiring):
+        return not _is_pair(X) and _square(A) and _vals_match(A, X)
+    return (isinstance(ring, Semiring) and not _is_pair(X)
+            and _vals_match(A, X))
+
+
+def _vals_match(A, X) -> bool:
+    """(nnz, k) multivalues (with_vals) only broadcast against an (n, k)
+    multivector — reject 1-D inputs at dispatch time, not mid-broadcast."""
+    return A.vals.ndim == 1 or getattr(X, "ndim", 0) == 2
+
+
+@register_backend("coo", cpu_priority=30, tpu_priority=30,
+                  supports=_coo_supports)
+def _coo_execute(A, X, ring, desc):
+    """Segment reduction over nnz — the reference path for every ring.
+
+    Y[i] = add_j mul(A[i,j], X[j]); transpose swaps the gather/scatter
+    index roles (rows <-> cols), which is how vxm rides the same code.
+    """
+    out_idx, src_idx = (A.cols, A.rows) if desc.transpose else (A.rows, A.cols)
+    n_out = A.n_cols if desc.transpose else A.n_rows
+    if isinstance(ring, PairEdgeSemiring):
+        U, E = X
+        vals = _broadcast_vals(A.vals, U.ndim)
+        contrib = ring.edge_mul(vals, U[src_idx], U[out_idx],
+                                E[src_idx], E[out_idx])
+        return ring.base.segment_reduce(contrib, out_idx, n_out)
+    vals = _broadcast_vals(A.vals, X.ndim)
+    if isinstance(ring, EdgeSemiring):
+        contrib = ring.edge_mul(vals, X[src_idx], X[out_idx])
+        return ring.base.segment_reduce(contrib, out_idx, n_out)
+    contrib = ring.mul(vals, X[src_idx])
+    return ring.segment_reduce(contrib, out_idx, n_out)
+
+
+# --------------------------------------------------------------- ell backend
+
+def _ell_supports(A, X, ring, desc):
+    """Padded-ELL is only sound for rings whose pad entries (col=row,
+    val=0) contribute the add-identity — exactly the rings with a
+    registered ``padded`` fast path (semiring.register_ring_fast_paths)."""
+    return (isinstance(A, SparseMatrix)
+            and A.ell_cols is not None
+            and A.vals.ndim == 1
+            and isinstance(ring, Semiring)
+            and not isinstance(ring, (EdgeSemiring, PairEdgeSemiring))
+            and not _is_pair(X)
+            and not desc.transpose
+            and fast_paths(ring).padded is not None)
+
+
+@register_backend("ell", cpu_priority=20, tpu_priority=20,
+                  supports=_ell_supports)
+def _ell_execute(A, X, ring, desc):
+    """Padded-ELL: gather (n, max_nnz[, k]) then fold along the pad axis."""
+    gathered = X[A.ell_cols]                      # (n, m[, k])
+    vals = A.ell_vals if X.ndim == 1 else A.ell_vals[..., None]
+    contrib = ring.mul(vals, gathered)
+    return fast_paths(ring).padded(contrib)
+
+
+# -------------------------------------------------------- bsr_pallas backend
+
+def _pad_rows(n_pad_rows, *Xs):
+    pad = n_pad_rows - Xs[0].shape[0]
+    return [jnp.pad(X, ((0, pad), (0, 0))) if pad else X for X in Xs]
+
+
+def _bsr_supports(A, X, ring, desc):
+    return (isinstance(A, SparseMatrix)
+            and A.bsr_blocks is not None
+            and A.vals.ndim == 1
+            and isinstance(ring, Semiring)
+            and not isinstance(ring, (EdgeSemiring, PairEdgeSemiring))
+            and ring.name == "reals_+x"
+            and not _is_pair(X)
+            and getattr(X, "ndim", 0) == 2
+            and not desc.transpose)
+
+
+def bsr_spmm_run(A, X, interpret: bool = False,
+                 use_pallas: bool | None = None):
+    """BSR SpMM with explicit path control (shared by the backend and the
+    deprecated kernel shims).  ``use_pallas=None`` resolves to the
+    platform default (Pallas on TPU or under interpret, jnp ref on CPU)."""
+    from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_pallas
+    from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
+
+    bs = A.block_size
+    n_rb = len(A.bsr_indptr) - 1
+    (Xp,) = _pad_rows(n_rb * bs, X)
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if use_pallas or interpret:
+        Y = bsr_spmm_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
+                            n_row_blocks=n_rb, block_size=bs,
+                            interpret=interpret)
+    else:
+        Y = bsr_spmm_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
+                         n_row_blocks=n_rb, block_size=bs)
+    return Y[: A.n_rows]
+
+
+@register_backend("bsr_pallas", cpu_priority=60, tpu_priority=11,
+                  supports=_bsr_supports)
+def _bsr_execute(A, X, ring, desc):
+    """128x128 dense-tile SpMM on the MXU (Pallas); jnp blocked ref on CPU.
+
+    ``desc.interpret`` forces the Pallas kernel in interpreter mode —
+    the numerics-pinning path used by the backend-equivalence suite.
+    """
+    return bsr_spmm_run(A, X, interpret=desc.interpret)
+
+
+# ------------------------------------------------------- edge_pallas backend
+
+def _edge_pallas_supports(A, X, ring, desc):
+    if not (isinstance(A, SparseMatrix) and A.bsr_blocks is not None
+            and A.vals.ndim == 1 and not desc.transpose and _square(A)):
+        return False
+    if isinstance(ring, EdgeSemiring) and ring.kind == "plap_apply":
+        return not _is_pair(X) and getattr(X, "ndim", 0) == 2
+    if isinstance(ring, PairEdgeSemiring) and ring.kind == "plap_hvp":
+        return (_is_pair(X) and len(X) == 2 and X[0].ndim == 2
+                and X[0].shape == X[1].shape)
+    return False
+
+
+def edge_pallas_run(A, X, ring, interpret: bool = False,
+                    use_pallas: bool | None = None):
+    """Fused p-Laplacian kernels with explicit path control (shared by
+    the backend and the deprecated kernel shims).  ``X`` is a single
+    multivector for a "plap_apply" ring, a (U, Eta) pair for
+    "plap_hvp"."""
+    from repro.kernels.plap_edge.plap_edge import (plap_apply_pallas,
+                                                   plap_hvp_pallas)
+    from repro.kernels.plap_edge.ref import (plap_apply_ref,
+                                             plap_hvp_edge_ref)
+
+    p, eps = ring.params
+    bs = A.block_size
+    n_rb = len(A.bsr_indptr) - 1
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    if not _is_pair(X):
+        (Xp,) = _pad_rows(n_rb * bs, X)
+        if use_pallas or interpret:
+            Y = plap_apply_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
+                                  Xp, n_row_blocks=n_rb, block_size=bs,
+                                  p=p, eps=eps, interpret=interpret)
+        else:
+            Y = plap_apply_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
+                               Xp, n_rb, bs, p, eps)
+    else:
+        U, E = X
+        Up, Ep = _pad_rows(n_rb * bs, U, E)
+        if use_pallas or interpret:
+            Y = plap_hvp_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
+                                Up, Ep, n_row_blocks=n_rb, block_size=bs,
+                                p=p, eps=eps, interpret=interpret)
+        else:
+            Y = plap_hvp_edge_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
+                                  Up, Ep, n_rb, bs, p, eps)
+    return Y[: A.n_rows]
+
+
+@register_backend("edge_pallas", cpu_priority=61, tpu_priority=10,
+                  supports=_edge_pallas_supports)
+def _edge_pallas_execute(A, X, ring, desc):
+    """Fused p-Laplacian edge-semiring kernels over BSR tiles.
+
+    Claims rings by *kind* ("plap_apply" / "plap_hvp", with (p, eps) in
+    ring.params) rather than tracing the edge closure — the kernel IS
+    the semiring specialization (DESIGN.md §2, adaptation 4).
+    """
+    return edge_pallas_run(A, X, ring, interpret=desc.interpret)
+
+
+# -------------------------------------------------------------- dist backend
+
+def _dist_supports(A, X, ring, desc):
+    if desc.mesh is None or desc.transpose or _is_pair(X):
+        return False
+    from repro.grblas.dist import RowPartitionedMatrix
+
+    if isinstance(A, RowPartitionedMatrix):
+        ok_layout = True
+    elif isinstance(A, SparseMatrix):
+        ok_layout = A.ell_cols is not None and A.vals.ndim == 1
+    else:
+        return False
+    if isinstance(ring, EdgeSemiring):
+        # the dist path folds the padded-ELL axis with an unconditional
+        # sum, so pad entries (val=0) must be annihilated by the edge
+        # multiply: guaranteed for the known plap kinds
+        # (edge_mul(0, ...) == 0), NOT for generic edge closures — those
+        # must run the coo backend.
+        return (ok_layout and ring.base.name == "reals_+x"
+                and ring.kind == "plap_apply")
+    return (ok_layout and isinstance(ring, Semiring)
+            and ring.name == "reals_+x")
+
+
+@register_backend("dist", cpu_priority=0, tpu_priority=0,
+                  supports=_dist_supports)
+def _dist_execute(A, X, ring, desc):
+    """Row-block sharded SpMM over desc.mesh (shard_map + all-gather).
+
+    Accepts a pre-built RowPartitionedMatrix or a plain SparseMatrix —
+    the partition for (mesh axis size) is built host-side once and
+    memoized on the container *instance*.  Two caveats of that memo: it
+    is not pytree state (a matrix that crosses a jit/transform boundary
+    re-partitions on the next call), and it cannot be built from traced
+    arrays at all — pass the matrix as a closure constant, or pre-build
+    the RowPartitionedMatrix outside the transform.
+    """
+    from repro.grblas.dist import RowPartitionedMatrix, make_row_partition, shard_mxm
+
+    if isinstance(A, RowPartitionedMatrix):
+        Ap = A
+    else:
+        if isinstance(A.ell_cols, jax.core.Tracer):
+            raise BackendUnavailableError(
+                "dist backend cannot row-partition a traced SparseMatrix "
+                "(partitioning is host-side numpy): close over the matrix "
+                "instead of passing it as a jit argument, or pre-build a "
+                "RowPartitionedMatrix with make_row_partition outside the "
+                "transform")
+        n_shards = int(desc.mesh.shape[desc.axis])
+        cache = getattr(A, "_dist_partitions", None)
+        if cache is None:
+            cache = {}
+            A._dist_partitions = cache  # host-side memo, not pytree state
+        if n_shards not in cache:
+            cache[n_shards] = make_row_partition(A, n_shards)
+        Ap = cache[n_shards]
+    return shard_mxm(Ap, X, desc.mesh, axis=desc.axis, ring=ring)

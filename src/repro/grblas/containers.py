@@ -132,6 +132,18 @@ class SparseMatrix:
         _ = keys
 
     # ---- conveniences ----
+    def with_vals(self, vals: jnp.ndarray) -> "SparseMatrix":
+        """Same sparsity pattern, new values — GraphBLAS' "new matrix on
+        the old structure" (Algorithm 1 builds W-hat this way each Newton
+        step).  ``vals`` may be (nnz,) or (nnz, k) *multivalues* (one
+        value per stored entry per output column; the COO backend
+        broadcasts them against an (n, k) multivector).  Derived ELL/BSR
+        layouts are dropped (they would be stale), so the result always
+        executes on the COO backend."""
+        return SparseMatrix(n_rows=self.n_rows, n_cols=self.n_cols,
+                            nnz=self.nnz, rows=self.rows, cols=self.cols,
+                            vals=vals)
+
     def to_dense(self) -> jnp.ndarray:
         d = jnp.zeros((self.n_rows, self.n_cols), self.vals.dtype)
         return d.at[self.rows, self.cols].add(self.vals)

@@ -74,11 +74,31 @@ def make_row_partition(A: SparseMatrix, n_shards: int,
 def dist_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
              axis: str = "data", ring: Semiring | EdgeSemiring = reals_ring,
              p: float = 2.0, eps: float = 1e-9) -> jnp.ndarray:
+    """Deprecated shim — the sharded layout is now reachable through the
+    unified API: ``api.mxm(Ap_or_W, X, ring,
+    desc=Descriptor(backend="dist", mesh=mesh, axis=axis))`` (a plain
+    SparseMatrix is row-partitioned once and memoized)."""
+    import warnings
+
+    from repro.grblas import api
+    warnings.warn(
+        "repro.grblas.dist.dist_mxm is deprecated; use grblas.api.mxm with "
+        "Descriptor(backend='dist', mesh=..., axis=...) — DESIGN.md §3",
+        DeprecationWarning, stacklevel=2)
+    return api.mxm(Ap, X, ring,
+                   desc=api.Descriptor(backend="dist", mesh=mesh, axis=axis))
+
+
+def shard_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
+              axis: str = "data",
+              ring: Semiring | EdgeSemiring = reals_ring) -> jnp.ndarray:
     """Distributed SpMM: rows sharded over ``axis``, X gathered per shard.
 
-    X: (n_padded,) or (n_padded, k) row-sharded on entry; returns the
+    The execute hook of the "dist" backend (grblas.backends).  X:
+    (n_padded,) or (n_padded, k) row-sharded on entry; returns the
     product with the same sharding.  Inside each shard we run the same
-    ELL kernel as ops._ell_spmm, so dist == single-device numerically.
+    ELL gather kernel as the single-device "ell" backend, so dist ==
+    single-device numerically.
     """
     n_pad = Ap.ell_cols.shape[0] * Ap.ell_cols.shape[1]
     vec_spec = P(axis) if X.ndim == 1 else P(axis, None)

@@ -1,89 +1,65 @@
-"""Algebraic operators: vxm / mxv / mxm / eWiseApply / apply / reduce.
+"""Algebraic operators: eWiseApply / apply / reduce + deprecated shims.
 
-Mirrors the grb:: primitives used in the paper's Algorithm 1:
+The SpMM family (mxm / mxv / vxm) moved to the unified execution API in
+``repro.grblas.api`` — one ``mxm(A, X, ring, *, mask, accum, desc)``
+signature whose ``Descriptor`` selects the backend (coo / ell /
+bsr_pallas / edge_pallas / dist) from the registry in
+``repro.grblas.backends``.  The flag-style entry points below
+(``use_ell=...``) are kept as thin deprecated shims for one release;
+see DESIGN.md §3 for the migration table.
 
-    grb::vxm(v, eta, H, reals_ring)     -> vxm(eta, H, reals_ring)
-    grb::eWiseApply(w, eta, D, mul)     -> e_wise_apply(eta, D, mul)
-    grb::eWiseApply(res, w, v, sub)     -> e_wise_apply(w, v, sub)
-
-All ops are pure jnp and jit-able.  ``mxm`` handles the n×k multivector
-(SpMM) case — the key TPU-side fusion: the paper loops `for l in 1..k`
-over k separate SpMVs; here all k columns ride one pass.
-
-Format dispatch: ELL when available (vectorized gather, VPU friendly),
-COO segment-sum otherwise (reference path).  The Pallas BSR kernel is
-exposed separately in kernels/bsr_spmm/ops.py and is numerically pinned
-to these implementations.
+Still current here: the dense elementwise ops (e_wise_apply, apply) and
+``reduce``, which now folds under the ring's registered dense fast path
+(semiring.register_ring_fast_paths) instead of a name-keyed if-chain,
+with a correct generic scan-fold for unregistered monoids.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp
 
+from repro.grblas import api
 from repro.grblas.containers import SparseMatrix
-from repro.grblas.semiring import Semiring, EdgeSemiring, reals_ring
+from repro.grblas.semiring import (Semiring, EdgeSemiring, fast_paths,
+                                   reals_ring)
 
 
-def _coo_spmm(A: SparseMatrix, X: jnp.ndarray, ring: Semiring) -> jnp.ndarray:
-    """Y[i] = add_j mul(A[i,j], X[j])  via segment reduction over nnz."""
-    contrib = ring.mul(A.vals[:, None] if X.ndim == 2 else A.vals, X[A.cols])
-    return ring.segment_reduce(contrib, A.rows, A.n_rows)
-
-
-def _ell_spmm(A: SparseMatrix, X: jnp.ndarray, ring: Semiring) -> jnp.ndarray:
-    """Padded-ELL: gather (n, max_nnz[, k]) then reduce along axis 1."""
-    gathered = X[A.ell_cols]                      # (n, m[, k])
-    vals = A.ell_vals if X.ndim == 1 else A.ell_vals[..., None]
-    contrib = ring.mul(vals, gathered)
-    if ring.name == "reals_+x":
-        return jnp.sum(contrib, axis=1)
-    # generic monoid fold over the padded axis
-    def fold(carry, x):
-        return ring.add(carry, x), None
-    init = jnp.full(contrib.shape[:1] + contrib.shape[2:], ring.zero,
-                    dtype=contrib.dtype)
-    out, _ = jax.lax.scan(fold, init, jnp.moveaxis(contrib, 1, 0))
-    return out
-
-
-def _coo_edge_spmm(A: SparseMatrix, X: jnp.ndarray, ring: EdgeSemiring) -> jnp.ndarray:
-    """Y[i] = add_j edge_mul(w_ij, X[j], X[i]) — matrix-free p-Laplacian."""
-    contrib = ring.edge_mul(
-        A.vals[:, None] if X.ndim == 2 else A.vals, X[A.cols], X[A.rows])
-    return ring.base.segment_reduce(contrib, A.rows, A.n_rows)
+def _deprecated(old: str, new: str):
+    warnings.warn(
+        f"repro.grblas.{old} is deprecated; use {new} "
+        f"(see DESIGN.md §3 migration notes)",
+        DeprecationWarning, stacklevel=3)
 
 
 def mxm(A: SparseMatrix, X: jnp.ndarray,
         ring: Union[Semiring, EdgeSemiring] = reals_ring,
         use_ell: bool = True) -> jnp.ndarray:
-    """Sparse × dense multivector (SpMM). X: (n,) or (n,k)."""
-    if isinstance(ring, EdgeSemiring):
-        return _coo_edge_spmm(A, X, ring)
-    # ELL pad entries are (col=row, val=0): no-ops under the reals ring
-    # only, so generic monoids take the COO segment-reduce path.
-    if use_ell and A.ell_cols is not None and ring.name == "reals_+x":
-        return _ell_spmm(A, X, ring)
-    return _coo_spmm(A, X, ring)
+    """Deprecated shim — use grblas.api.mxm(A, X, ring, desc=Descriptor())."""
+    _deprecated("ops.mxm(use_ell=...)", "grblas.api.mxm(..., desc=...)")
+    desc = api.Descriptor(backend="auto" if use_ell else "coo")
+    return api.mxm(A, X, ring, desc=desc)
 
 
 def mxv(A: SparseMatrix, x: jnp.ndarray, ring=reals_ring) -> jnp.ndarray:
-    """y = A (*) x under ring — grb::mxv."""
-    return mxm(A, x, ring)
+    """Deprecated shim — use grblas.api.mxv."""
+    _deprecated("ops.mxv", "grblas.api.mxv")
+    return api.mxv(A, x, ring)
 
 
 def vxm(x: jnp.ndarray, A: SparseMatrix, ring=reals_ring) -> jnp.ndarray:
-    """y = x (*) A under ring — grb::vxm.  For symmetric A (all graph
-    Laplacian uses here) this equals mxv; for general A we transpose via
-    the COO path (rows<->cols swap)."""
-    if isinstance(ring, EdgeSemiring):
-        contrib = ring.edge_mul(x.ndim == 2 and A.vals[:, None] or A.vals,
-                                x[A.rows], x[A.cols])
-        return ring.base.segment_reduce(contrib, A.cols, A.n_cols)
-    contrib = ring.mul(A.vals[:, None] if x.ndim == 2 else A.vals, x[A.rows])
-    return ring.segment_reduce(contrib, A.cols, A.n_cols)
+    """Deprecated shim — use grblas.api.vxm.
+
+    (The old in-place implementation crashed on 2-D multivectors with an
+    edge ring — ``x.ndim == 2 and A.vals[:, None] or A.vals`` is a truth-
+    value-ambiguous boolean on arrays; the api COO backend broadcasts
+    values properly, regression-tested in tests/test_grblas_api.py.)
+    """
+    _deprecated("ops.vxm", "grblas.api.vxm")
+    return api.vxm(x, A, ring)
 
 
 def e_wise_apply(a: jnp.ndarray, b: jnp.ndarray, op: Callable) -> jnp.ndarray:
@@ -97,18 +73,19 @@ def apply(a: jnp.ndarray, op: Callable) -> jnp.ndarray:
 
 
 def reduce(a: jnp.ndarray, ring: Semiring = reals_ring, axis=None) -> jnp.ndarray:
-    """grb::reduce — fold a dense container under the add-monoid."""
-    if ring.name == "reals_+x":
-        return jnp.sum(a, axis=axis)
-    if ring.name == "min_+":
-        return jnp.min(a, axis=axis)
-    if ring.name == "max_x":
-        return jnp.max(a, axis=axis)
-    if ring.name == "bool_|&":
-        return jnp.any(a, axis=axis)
+    """grb::reduce — fold a dense container under the add-monoid.
+
+    Registered rings use their dense fast path; unregistered monoids get
+    a correct sequential fold under ``ring.add`` from ``ring.zero``.
+    """
+    fp = fast_paths(ring)
+    if fp.dense is not None:
+        return fp.dense(a, axis)
     flat = a.ravel() if axis is None else jnp.moveaxis(a, axis, 0)
+
     def fold(c, x):
         return ring.add(c, x), None
+
     init = jnp.full(flat.shape[1:] if axis is not None else (), ring.zero, a.dtype)
     out, _ = jax.lax.scan(fold, init, flat)
     return out
@@ -119,4 +96,4 @@ def fused_plap_apply(A: SparseMatrix, U: jnp.ndarray, p: float,
                      eps: float = 1e-9, k: int = 1) -> jnp.ndarray:
     """(Delta_p U)_i = sum_j w_ij phi_p(u_i - u_j), all k columns fused."""
     from repro.grblas.semiring import plap_edge_semiring
-    return mxm(A, U, plap_edge_semiring(p, eps))
+    return api.mxm(A, U, plap_edge_semiring(p, eps))

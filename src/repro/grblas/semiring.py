@@ -1,4 +1,4 @@
-"""Algebraic relations: semirings and the edge-semiring extension.
+"""Algebraic relations: semirings, edge-semirings, and per-ring fast paths.
 
 A GraphBLAS semiring is (add-monoid, mul-op, zero, one).  ``add`` must be
 associative+commutative with identity ``zero``; ``mul`` distributes over
@@ -8,16 +8,69 @@ property-tested in tests/test_grblas_properties.py.
 The EdgeSemiring generalizes ``mul`` to an *edge function*
 ``mul(w_ij, x_j, x_i)`` so that one SpMV pass can express the graph
 p-Laplacian apply  (Delta_p x)_i = sum_j w_ij phi_p(x_i - x_j)  without
-materializing the reweighted matrix W-hat each Newton iteration.  This is
-the TPU adaptation of the paper's Algorithm 1 (see DESIGN.md §2).
+materializing the reweighted matrix W-hat each Newton iteration.  The
+PairEdgeSemiring extends this to a *pair* of multivectors, which is what
+the Newton Hessian apply needs:  sum_j w_ij phi'(u_i-u_j) (eta_i-eta_j).
+This is the TPU adaptation of the paper's Algorithm 1 (see DESIGN.md §2).
+
+Fast paths
+----------
+Reductions under the add-monoid used to be dispatched by string-matching
+``ring.name`` inside ops.reduce / Semiring.segment_reduce.  They are now
+a registry: ``register_ring_fast_paths(name, segment=, dense=, padded=)``
+attaches the vectorized implementations a ring is allowed to use, and
+``fast_paths(ring)`` looks them up.  Rings without a registered fast path
+fall back to a *correct* (if slow) sequential fold under ``add`` — never
+to a silent ``segment_sum``.  The ``padded`` entry is the ELL-layout
+reducer and may only be registered for rings whose pad entries
+(col=row, val=0) are add-identity contributions — true for the reals
+(+,*) ring, false in general (e.g. min-plus, where mul(0, x_row) = x_row
+is not +inf).  Backend selection (grblas.backends) keys on these entries.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 
+
+# --------------------------------------------------------------- fast paths
+
+@dataclasses.dataclass(frozen=True)
+class RingFastPaths:
+    """Vectorized reducers a named ring is allowed to use.
+
+    segment(values, segment_ids, num_segments) — COO segment reduction
+    dense(a, axis)                             — dense container fold
+    padded(contrib)                            — ELL pad-axis (axis=1) fold;
+        register ONLY if the layout's pad entries reduce as add-identity.
+    """
+
+    segment: Optional[Callable] = None
+    dense: Optional[Callable] = None
+    padded: Optional[Callable] = None
+
+
+_FAST_PATHS: Dict[str, RingFastPaths] = {}
+_EMPTY_FAST_PATHS = RingFastPaths()
+
+
+def register_ring_fast_paths(name: str, *, segment: Callable = None,
+                             dense: Callable = None,
+                             padded: Callable = None) -> None:
+    """Register (or replace) the fast-path reducers for ring ``name``."""
+    _FAST_PATHS[name] = RingFastPaths(segment=segment, dense=dense,
+                                      padded=padded)
+
+
+def fast_paths(ring) -> RingFastPaths:
+    """The registered fast paths of ``ring`` (empty set if none)."""
+    return _FAST_PATHS.get(getattr(ring, "name", None), _EMPTY_FAST_PATHS)
+
+
+# ----------------------------------------------------------------- semirings
 
 @dataclasses.dataclass(frozen=True)
 class Semiring:
@@ -30,19 +83,26 @@ class Semiring:
     name: str = "semiring"
 
     def segment_reduce(self, values, segment_ids, num_segments):
-        """Reduce ``values`` per segment under the add-monoid."""
-        import jax.ops  # noqa: F401  (documentation of provenance)
-        import jax
+        """Reduce ``values`` per segment under the add-monoid.
 
-        if self.name == "reals_+x":
-            return jax.ops.segment_sum(values, segment_ids, num_segments)
-        if self.name == "min_+":
-            return jax.ops.segment_min(values, segment_ids, num_segments)
-        if self.name in ("max_x", "bool_|&"):
-            return jax.ops.segment_max(values, segment_ids, num_segments)
-        # generic fallback: sort-free fori over values would be O(nnz);
-        # all shipped rings hit a fast path above.
-        return jax.ops.segment_sum(values, segment_ids, num_segments)
+        Registered rings use their vectorized segment reducer; anything
+        else takes a correct generic fold: a sequential O(nnz) scan that
+        combines each value into its segment with ``add``, starting from
+        ``zero``.  (The old behaviour — silently falling back to
+        segment_sum — was wrong for any non-additive monoid.)
+        """
+        fp = fast_paths(self)
+        if fp.segment is not None:
+            return fp.segment(values, segment_ids, num_segments)
+        init = jnp.full((num_segments,) + values.shape[1:], self.zero,
+                        values.dtype)
+
+        def body(acc, t):
+            v, s = t
+            return acc.at[s].set(self.add(acc[s], v)), None
+
+        out, _ = jax.lax.scan(body, init, (values, segment_ids))
+        return out
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,11 +111,35 @@ class EdgeSemiring:
 
     mul(w, x_src, x_dst) -> contribution of edge (dst <- src).
     The add-monoid is inherited from ``base``.
+
+    ``kind``/``params`` are dispatch metadata for the backend registry
+    (grblas.backends): a Pallas kernel can claim rings of a known kind
+    (e.g. "plap_apply" with params (p, eps)) instead of tracing the
+    closure.  Generic edge-semirings run the COO segment path.
     """
 
     base: Semiring
     edge_mul: Callable  # (w_ij, x_j, x_i) -> value
     name: str = "edge_semiring"
+    kind: str = "generic"
+    params: Tuple = ()
+
+
+@dataclasses.dataclass(frozen=True)
+class PairEdgeSemiring:
+    """Edge-semiring over a PAIR of multivectors (U, Eta).
+
+    mul(w, u_src, u_dst, e_src, e_dst) -> contribution of edge
+    (dst <- src).  One SpMM pass under this ring is the matrix-free
+    Newton HVP of the p-Laplacian (DESIGN.md §2, adaptation 4): the
+    reweighted matrix W-hat is never materialized.
+    """
+
+    base: Semiring
+    edge_mul: Callable  # (w_ij, u_j, u_i, eta_j, eta_i) -> value
+    name: str = "pair_edge_semiring"
+    kind: str = "generic"
+    params: Tuple = ()
 
 
 def _add(a, b):
@@ -74,6 +158,31 @@ boolean_ring = Semiring(
 )
 
 
+register_ring_fast_paths(
+    "reals_+x",
+    segment=jax.ops.segment_sum,
+    dense=lambda a, axis: jnp.sum(a, axis=axis),
+    padded=lambda contrib: jnp.sum(contrib, axis=1),  # pads are exact no-ops
+)
+register_ring_fast_paths(
+    "min_+",
+    segment=jax.ops.segment_min,
+    dense=lambda a, axis: jnp.min(a, axis=axis),
+)
+register_ring_fast_paths(
+    "max_x",
+    segment=jax.ops.segment_max,
+    dense=lambda a, axis: jnp.max(a, axis=axis),
+)
+register_ring_fast_paths(
+    "bool_|&",
+    segment=jax.ops.segment_max,   # max == or on {False, True}
+    dense=lambda a, axis: jnp.any(a, axis=axis),
+)
+
+
+# ------------------------------------------------------- p-Laplacian rings
+
 def phi_p(x, p, eps=0.0):
     """phi_p(x) = |x|^{p-1} sign(x), optionally eps-smoothed for p<2.
 
@@ -91,21 +200,38 @@ def plap_edge_semiring(p: float, eps: float = 1e-9) -> EdgeSemiring:
     def edge_mul(w, x_src, x_dst):
         return w * phi_p(x_dst - x_src, p, eps)
 
-    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul, name=f"plap_edge_p{p}")
+    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul,
+                        name=f"plap_edge_p{p}", kind="plap_apply",
+                        params=(p, eps))
+
+
+def plap_hvp_edge_semiring(p: float, eps: float = 1e-9) -> PairEdgeSemiring:
+    """Pair-edge-semiring for the matrix-free Hessian apply.
+
+    One SpMM under this ring computes, per column,
+        y_i = sum_j w_ij phi'(u_i - u_j) (eta_i - eta_j)
+    i.e. the HessA part of the Newton HVP without materializing W-hat.
+    The caller supplies X = (U, Eta).
+    """
+    from repro.core import phi as PHI
+
+    def edge_mul(w, u_src, u_dst, e_src, e_dst):
+        return w * PHI.phi_prime(u_dst - u_src, p, eps) * (e_dst - e_src)
+
+    return PairEdgeSemiring(base=reals_ring, edge_mul=edge_mul,
+                            name=f"plap_hvp_p{p}", kind="plap_hvp",
+                            params=(p, eps))
 
 
 def plap_hess_edge_semiring(p: float, eps: float = 1e-9) -> EdgeSemiring:
-    """Edge-semiring for the matrix-free Hessian apply.
+    """Deprecated pre-fused Hessian edge-semiring (kept one release).
 
-    Computes  w_ij |u_i-u_j|^{p-2} (eta_i - eta_j)  where the (u, eta)
-    pair is packed as complex-free stacked input handled by ops.mxm_edge
-    with two multivectors; see core/plap.py for the call.
+    Superseded by ``plap_hvp_edge_semiring``: the pair-edge ring sees
+    (U, Eta) directly instead of a caller-prefused w*phi'(du) weight.
     """
 
     def edge_mul(w_and_du, eta_src, eta_dst):
-        # w_and_du is pre-fused: w_ij * |u_i - u_j|^{p-2}  (computed on the
-        # fly by the caller per edge); this closure only applies the eta
-        # difference.  Kept for API symmetry.
         return w_and_du * (eta_dst - eta_src)
 
-    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul, name=f"plap_hess_p{p}")
+    return EdgeSemiring(base=reals_ring, edge_mul=edge_mul,
+                        name=f"plap_hess_p{p}")

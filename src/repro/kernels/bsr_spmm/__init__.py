@@ -1,3 +1,9 @@
+# Import the impl module FIRST: the first import of the submodule
+# `repro.kernels.bsr_spmm.bsr_spmm` sets the package attribute
+# ``bsr_spmm`` to the module object.  Doing it eagerly here means the
+# function binding below wins, and later lazy imports of the submodule
+# (grblas.backends) hit the sys.modules cache without re-clobbering.
+import repro.kernels.bsr_spmm.bsr_spmm  # noqa: F401
 from repro.kernels.bsr_spmm.ops import bsr_spmm
 from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
 

@@ -1,30 +1,24 @@
-"""jit'd public wrapper: dispatches SparseMatrix -> Pallas BSR kernel
-(TPU) or the jnp oracle (CPU / no-BSR fallback)."""
+"""Deprecated shim — the BSR SpMM is now the "bsr_pallas" backend of the
+unified API: ``grblas.api.mxm(A, X, desc=Descriptor(backend="bsr_pallas",
+interpret=...))`` (auto-selected on TPU).  Kept one release; see
+DESIGN.md §3."""
 from __future__ import annotations
 
-import jax
+import warnings
+
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
-from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_pallas
-from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
 
 
 def bsr_spmm(A: SparseMatrix, X: jnp.ndarray, use_pallas: bool | None = None,
              interpret: bool = False) -> jnp.ndarray:
     """Y = A @ X using the BSR layout. X: (n, k). Returns (n, k)."""
+    warnings.warn(
+        "kernels.bsr_spmm.bsr_spmm is deprecated; use grblas.api.mxm with "
+        "Descriptor(backend='bsr_pallas') — DESIGN.md §3",
+        DeprecationWarning, stacklevel=2)
     assert A.bsr_blocks is not None, "build_bsr=True required"
-    bs = A.block_size
-    n_rb = len(A.bsr_indptr) - 1
-    pad_rows = n_rb * bs - X.shape[0]
-    Xp = jnp.pad(X, ((0, pad_rows), (0, 0))) if pad_rows else X
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas or interpret:
-        Y = bsr_spmm_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
-                            n_row_blocks=n_rb, block_size=bs,
-                            interpret=interpret)
-    else:
-        Y = bsr_spmm_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
-                         n_row_blocks=n_rb, block_size=bs)
-    return Y[: A.n_rows]
+    from repro.grblas.backends import bsr_spmm_run
+
+    return bsr_spmm_run(A, X, interpret=interpret, use_pallas=use_pallas)

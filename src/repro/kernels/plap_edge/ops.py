@@ -1,51 +1,46 @@
-"""Public wrappers for the fused p-Laplacian kernels (TPU Pallas or jnp)."""
+"""Deprecated shims — the fused p-Laplacian kernels are now the
+"edge_pallas" backend of the unified API (auto-selected on TPU when the
+BSR layout is built):
+
+    api.mxm(A, X, plap_edge_semiring(p, eps), desc=Descriptor(...))
+    api.mxm(A, (U, Eta), plap_hvp_edge_semiring(p, eps), desc=...)
+
+Kept one release; see DESIGN.md §3."""
 from __future__ import annotations
 
-import jax
+import warnings
+
 import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
-from repro.kernels.plap_edge.plap_edge import plap_apply_pallas, plap_hvp_pallas
-from repro.kernels.plap_edge.ref import plap_apply_ref, plap_hvp_edge_ref
-
-
-def _prep(A: SparseMatrix, *Xs):
-    bs = A.block_size
-    n_rb = len(A.bsr_indptr) - 1
-    pad = n_rb * bs - Xs[0].shape[0]
-    return bs, n_rb, [jnp.pad(X, ((0, pad), (0, 0))) if pad else X for X in Xs]
 
 
 def plap_apply(A: SparseMatrix, X: jnp.ndarray, p: float, eps: float = 1e-9,
                use_pallas: bool | None = None, interpret: bool = False):
     """(Delta_p X) via the fused BSR kernel. X: (n,k)."""
+    warnings.warn(
+        "kernels.plap_edge.plap_apply is deprecated; use grblas.api.mxm "
+        "with plap_edge_semiring(p, eps) — DESIGN.md §3",
+        DeprecationWarning, stacklevel=2)
     assert A.bsr_blocks is not None, "build_bsr=True required"
-    bs, n_rb, (Xp,) = _prep(A, X)
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas or interpret:
-        Y = plap_apply_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
-                              n_row_blocks=n_rb, block_size=bs, p=p, eps=eps,
-                              interpret=interpret)
-    else:
-        Y = plap_apply_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids, Xp,
-                           n_rb, bs, p, eps)
-    return Y[: A.n_rows]
+    from repro.grblas.backends import edge_pallas_run
+    from repro.grblas.semiring import plap_edge_semiring
+
+    return edge_pallas_run(A, X, plap_edge_semiring(p, eps),
+                           interpret=interpret, use_pallas=use_pallas)
 
 
 def plap_hvp_edge(A: SparseMatrix, U: jnp.ndarray, Eta: jnp.ndarray,
                   p: float, eps: float = 1e-9,
                   use_pallas: bool | None = None, interpret: bool = False):
     """HessA-part HVP via the fused BSR kernel. U, Eta: (n,k)."""
+    warnings.warn(
+        "kernels.plap_edge.plap_hvp_edge is deprecated; use grblas.api.mxm "
+        "with plap_hvp_edge_semiring(p, eps) and X=(U, Eta) — DESIGN.md §3",
+        DeprecationWarning, stacklevel=2)
     assert A.bsr_blocks is not None, "build_bsr=True required"
-    bs, n_rb, (Up, Ep) = _prep(A, U, Eta)
-    if use_pallas is None:
-        use_pallas = jax.default_backend() == "tpu"
-    if use_pallas or interpret:
-        Y = plap_hvp_pallas(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
-                            Up, Ep, n_row_blocks=n_rb, block_size=bs,
-                            p=p, eps=eps, interpret=interpret)
-    else:
-        Y = plap_hvp_edge_ref(A.bsr_blocks, A.bsr_indices, A.bsr_row_ids,
-                              Up, Ep, n_rb, bs, p, eps)
-    return Y[: A.n_rows]
+    from repro.grblas.backends import edge_pallas_run
+    from repro.grblas.semiring import plap_hvp_edge_semiring
+
+    return edge_pallas_run(A, (U, Eta), plap_hvp_edge_semiring(p, eps),
+                           interpret=interpret, use_pallas=use_pallas)

@@ -43,6 +43,22 @@ SCRIPT = textwrap.dedent("""
     want3 = np.asarray(mxm(W, X, ring))
     got3 = np.asarray(dist_mxm(Ap, X, mesh, ring=ring))
     np.testing.assert_allclose(got3, want3, rtol=2e-4, atol=2e-5)
+
+    # unified API: the sharded layout is one Descriptor away — both from
+    # a pre-built partition and from the raw SparseMatrix (auto-partition
+    # + memoization on the container)
+    from repro.grblas import Descriptor
+    d = Descriptor(backend="dist", mesh=mesh)
+    got4 = np.asarray(mxm(Ap, X, desc=d))
+    np.testing.assert_allclose(got4, want, rtol=2e-5, atol=2e-5)
+    got5 = np.asarray(mxm(W, X, desc=d))
+    np.testing.assert_allclose(got5, want, rtol=2e-5, atol=2e-5)
+    assert 8 in W._dist_partitions          # partition memoized
+    got6 = np.asarray(mxm(W, X, ring, desc=d))
+    np.testing.assert_allclose(got6, want3, rtol=2e-4, atol=2e-5)
+    # auto backend picks dist once a mesh is in the descriptor
+    from repro.grblas import available_backends
+    assert available_backends(W, X, desc=d)[0] == "dist"
     print("DIST_SPMV_OK")
 """)
 

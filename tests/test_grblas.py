@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import pytest
 
 from repro.grblas import (
-    SparseMatrix, mxv, vxm, mxm, reals_ring, min_plus_ring, boolean_ring,
-    plap_edge_semiring,
+    SparseMatrix, mxv, vxm, mxm, Descriptor, reals_ring, min_plus_ring,
+    boolean_ring, plap_edge_semiring,
 )
 
 
@@ -32,7 +32,7 @@ def test_spmm_multivector(rng):
     got = mxm(M, jnp.asarray(X))
     np.testing.assert_allclose(np.asarray(got), A @ X, rtol=1e-10)
     # COO path agrees with ELL path
-    got_coo = mxm(M, jnp.asarray(X), use_ell=False)
+    got_coo = mxm(M, jnp.asarray(X), desc=Descriptor(backend="coo"))
     np.testing.assert_allclose(np.asarray(got), np.asarray(got_coo), rtol=1e-10)
 
 

@@ -1,14 +1,15 @@
-"""Pallas sparse kernels (interpret mode) vs jnp oracles, shape sweeps."""
+"""Pallas sparse kernels (interpret mode) vs jnp oracles, shape sweeps.
+
+Exercised through the unified API: Descriptor(backend="bsr_pallas"/
+"edge_pallas", interpret=True) is the numerics pin of the TPU kernels.
+"""
 import numpy as np
 import scipy.sparse as sp
 import jax.numpy as jnp
 import pytest
 
-from repro.grblas import SparseMatrix, mxm
-from repro.grblas.semiring import plap_edge_semiring
-from repro.kernels.bsr_spmm import bsr_spmm
-from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
-from repro.kernels.plap_edge import plap_apply, plap_hvp_edge
+from repro.grblas import SparseMatrix, Descriptor, mxm
+from repro.grblas.semiring import plap_edge_semiring, plap_hvp_edge_semiring
 from repro.core import plap
 
 
@@ -27,12 +28,12 @@ def test_bsr_spmm_matches_dense(n, bs, k, dtype):
     M = _mat(n, bs, dtype=dtype)
     rng = np.random.default_rng(1)
     X = jnp.asarray(rng.standard_normal((n, k)), dtype)
-    got = bsr_spmm(M, X, interpret=True)
+    got = mxm(M, X, desc=Descriptor(backend="bsr_pallas", interpret=True))
     want = np.asarray(M.to_dense()) @ np.asarray(X)
     tol = 1e-5 if dtype == jnp.float32 else 1e-12
     np.testing.assert_allclose(np.asarray(got), want, rtol=tol, atol=tol)
-    # and the ref agrees with itself through the wrapper's CPU path
-    got_ref = bsr_spmm(M, X, use_pallas=False)
+    # and the blocked jnp ref agrees through the backend's CPU path
+    got_ref = mxm(M, X, desc=Descriptor(backend="bsr_pallas"))
     np.testing.assert_allclose(np.asarray(got_ref), want, rtol=tol, atol=tol)
 
 
@@ -42,9 +43,11 @@ def test_plap_apply_kernel(n, bs, k, p):
     M = _mat(n, bs)
     rng = np.random.default_rng(2)
     X = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
-    got = plap_apply(M, X, p=p, eps=1e-6, interpret=True)
+    ring = plap_edge_semiring(p, eps=1e-6)
+    got = mxm(M, X, ring, desc=Descriptor(backend="edge_pallas",
+                                          interpret=True))
     # oracle: COO edge-semiring from grblas
-    want = mxm(M, X, plap_edge_semiring(p, eps=1e-6))
+    want = mxm(M, X, ring, desc=Descriptor(backend="coo"))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=2e-4, atol=2e-5)
 
@@ -56,8 +59,9 @@ def test_plap_hvp_kernel(n, bs, k, p):
     rng = np.random.default_rng(3)
     U = jnp.asarray(np.linalg.qr(rng.standard_normal((n, k)))[0], jnp.float32)
     Eta = jnp.asarray(rng.standard_normal((n, k)) * 0.1, jnp.float32)
-    got = plap_hvp_edge(M, U, Eta, p=p, eps=1e-6, interpret=True)
-    # oracle: the HessA part computed by the COO implementation
+    got = mxm(M, (U, Eta), plap_hvp_edge_semiring(p, eps=1e-6),
+              desc=Descriptor(backend="edge_pallas", interpret=True))
+    # oracle: the HessA part computed by hand in numpy
     d = np.asarray(U)[np.asarray(M.rows)] - np.asarray(U)[np.asarray(M.cols)]
     from repro.core import phi as PHI
     what = np.asarray(M.vals)[:, None] * np.asarray(

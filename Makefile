@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test dryrun-smoke
+.PHONY: verify imports test dryrun-smoke bench-kernels
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -14,3 +14,8 @@ test:
 
 dryrun-smoke:
 	$(PY) -m pytest -x -q tests/test_dryrun_smoke.py
+
+# Regenerates the committed BENCH_backends.json + BENCH_sellcs.json
+# (backend-descriptor sweep and the SELL-C-σ C x sigma x reorder sweep).
+bench-kernels:
+	$(PY) benchmarks/kernels_bench.py

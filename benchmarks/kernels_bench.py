@@ -5,10 +5,12 @@ bsr-interpret row below is recorded only so the backend-descriptor
 trajectory has every dispatch path on it.  TPU wall time comes from the
 roofline analysis.)
 
-Also sweeps the unified-API backend descriptor (coo / ell /
+Also sweeps the unified-API backend descriptor (coo / ell / sellcs /
 bsr_pallas-ref / bsr_pallas-interpret / edge coo vs ref) on one
 synthetic graph and emits BENCH_backends.json at the repo root so later
-PRs have a perf trajectory for the dispatch table.
+PRs have a perf trajectory for the dispatch table, plus the SELL-C-σ
+sweep (C x sigma x reorder vs coo/ell, skewed-degree + delaunay) into
+BENCH_sellcs.json.  ``make bench-kernels`` regenerates both.
 """
 from __future__ import annotations
 
@@ -20,10 +22,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.graphs import delaunay_graph
-from repro.grblas import Descriptor, mxm, plap_edge_semiring
+from repro.graphs import delaunay_graph, reorder, sbm_graph
+from repro.grblas import Descriptor, SparseMatrix, mxm, plap_edge_semiring
 from repro.kernels.kmeans_assign import kmeans_assign
 from repro.kernels.flash_attention import flash_attention
+
+_ROOT = Path(__file__).resolve().parent.parent
 
 
 def _time(f, *a, reps=5):
@@ -38,7 +42,8 @@ def _time(f, *a, reps=5):
 
 def sweep_backends(r=10, k=4, out_path=None):
     """Time one SpMM per backend descriptor on a delaunay graph."""
-    W, _ = delaunay_graph(r, seed=0, build_bsr=True, block_size=128)
+    W, _ = delaunay_graph(r, seed=0, build_bsr=True, block_size=128,
+                          build_sellcs=True)
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.standard_normal((W.n_rows, k)), jnp.float32)
     ring = plap_edge_semiring(1.4, 1e-8)
@@ -46,10 +51,12 @@ def sweep_backends(r=10, k=4, out_path=None):
     cases = [
         ("reals", "coo", Descriptor(backend="coo")),
         ("reals", "ell", Descriptor(backend="ell")),
+        ("reals", "sellcs", Descriptor(backend="sellcs")),
         ("reals", "bsr_ref", Descriptor(backend="bsr_pallas")),
         ("reals", "bsr_interpret",
          Descriptor(backend="bsr_pallas", interpret=True)),
         ("plap_edge", "coo", Descriptor(backend="coo")),
+        ("plap_edge", "sellcs", Descriptor(backend="sellcs")),
         ("plap_edge", "edge_ref", Descriptor(backend="edge_pallas")),
     ]
     entries = []
@@ -65,10 +72,82 @@ def sweep_backends(r=10, k=4, out_path=None):
                         "wall_us": round(us, 1)})
     payload = {
         "graph": f"delaunay_r{r}", "n": W.n_rows, "nnz": W.nnz, "k": k,
-        "fill_ratio": round(W.fill_ratio, 2),
+        "bsr_fill_ratio": round(W.bsr_fill_ratio(), 2),
+        "ell_fill_ratio": round(W.ell_fill_ratio(), 2),
+        "sellcs_fill_ratio": round(W.sellcs_fill_ratio(), 2),
         "platform": jax.default_backend(),
         "entries": entries,
     }
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+# ------------------------------------------------------ SELL-C-σ sweep
+
+def _skewed_sbm(seed=0, **kw):
+    """SBM with a tiny hub block: ~16 rows of degree ~200 over a ~deg-8
+    background — the power-law-ish regime where full ELL pads every row
+    to the hub width (fill >> 4x)."""
+    W, _ = sbm_graph([4000, 16], p_in=0.002, p_out=0.05, seed=seed,
+                     build_ell=True, **kw)   # force ELL: it IS the baseline
+    return W
+
+
+def _rebuild(W: SparseMatrix, C, sigma, method):
+    """Build the sweep variant: same graph, explicit SELL params, then an
+    optional bandwidth-reducing relabel (which preserves the params)."""
+    W2 = SparseMatrix.from_coo(
+        np.asarray(W.rows), np.asarray(W.cols), np.asarray(W.vals),
+        (W.n_rows, W.n_cols), build_ell=True, build_sellcs=True,
+        sell_c=C, sell_sigma=sigma)
+    if method != "none":
+        W2, _, _ = reorder(W2, method=method)
+    return W2
+
+
+def sweep_sellcs(k=4, out_path=None, reps=20):
+    """sellcs x {C, sigma, reorder} against coo / full-ELL, on a
+    skewed-degree SBM and a delaunay triangulation (reals ring — the
+    layout-bound op; the edge kinds share the same gather pattern)."""
+    rng = np.random.default_rng(0)
+    graphs = [
+        ("sbm_skew", _skewed_sbm(seed=0)),
+        ("delaunay_r13", delaunay_graph(13, seed=0)[0]),
+    ]
+    payload = {"platform": jax.default_backend(), "k": k, "graphs": []}
+    for name, W in graphs:
+        X = jnp.asarray(rng.standard_normal((W.n_rows, k)), jnp.float32)
+        entry = {
+            "graph": name, "n": W.n_rows, "nnz": W.nnz,
+            "ell_fill_ratio": round(W.ell_fill_ratio(), 2),
+            "baselines": [], "sellcs": [],
+        }
+        for label, desc in (("coo", Descriptor(backend="coo")),
+                            ("ell", Descriptor(backend="ell"))):
+            us = _time(jax.jit(lambda u, d=desc: mxm(W, u, desc=d)), X,
+                       reps=reps)
+            entry["baselines"].append({"backend": label,
+                                       "wall_us": round(us, 1)})
+        sell_desc = Descriptor(backend="sellcs")
+        for C in (16, 32, 64):
+            for sigma_name, sigma in (("C", C), ("8C", 8 * C), ("n", None)):
+                for method in ("none", "rcm"):
+                    Ws = _rebuild(W, C, sigma, method)
+                    us = _time(
+                        jax.jit(lambda u, M=Ws: mxm(M, u, desc=sell_desc)),
+                        X, reps=reps)
+                    entry["sellcs"].append({
+                        "C": C, "sigma": sigma_name, "reorder": method,
+                        "wall_us": round(us, 1),
+                        "fill_ratio": round(Ws.sellcs_fill_ratio(), 3),
+                    })
+        best = min(entry["sellcs"], key=lambda e: e["wall_us"])
+        ell_us = next(b["wall_us"] for b in entry["baselines"]
+                      if b["backend"] == "ell")
+        entry["best_sellcs"] = best
+        entry["speedup_vs_ell"] = round(ell_us / best["wall_us"], 2)
+        payload["graphs"].append(entry)
     if out_path is not None:
         Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     return payload
@@ -83,12 +162,13 @@ def main(csv=True):
 
     lines.append(f"kernel_bsr_spmm_del12,"
                  f"{_time(lambda x: mxm(W, x, desc=bsr_ref), X):.0f},"
-                 f"fill_ratio={W.fill_ratio:.1f}")
+                 f"fill_ratio={W.bsr_fill_ratio():.1f}")
     # BSR block-size sweep (EXPERIMENTS.md §Perf-kernels): fill ratio is
     # the HBM-roofline cost multiplier of the MXU-native layout
     for bs in (8, 16, 32, 64):
         Wb, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=bs)
-        lines.append(f"kernel_bsr_fill_bs{bs},0,fill_ratio={Wb.fill_ratio:.1f}")
+        lines.append(f"kernel_bsr_fill_bs{bs},0,"
+                     f"fill_ratio={Wb.bsr_fill_ratio():.1f}")
     lines.append(
         f"kernel_plap_edge_del12,"
         f"{_time(lambda x: mxm(W, x, plap_edge_semiring(1.4, 1e-9), desc=Descriptor(backend='edge_pallas')), X):.0f},"
@@ -103,11 +183,17 @@ def main(csv=True):
                  f"{_time(lambda: flash_attention(q, k, k, use_pallas=False)):.0f},"
                  f"hq=8_hkv=2")
 
-    bench = sweep_backends(
-        out_path=Path(__file__).resolve().parent.parent / "BENCH_backends.json")
+    bench = sweep_backends(out_path=_ROOT / "BENCH_backends.json")
     for e in bench["entries"]:
         lines.append(f"backend_{e['ring']}_{e['backend']}_del10,"
                      f"{e['wall_us']:.0f},n={bench['n']}")
+    sell = sweep_sellcs(out_path=_ROOT / "BENCH_sellcs.json")
+    for g in sell["graphs"]:
+        b = g["best_sellcs"]
+        lines.append(f"sellcs_best_{g['graph']},{b['wall_us']:.0f},"
+                     f"C={b['C']}_sigma={b['sigma']}_reorder={b['reorder']}"
+                     f"_fill={b['fill_ratio']}"
+                     f"_speedup_vs_ell={g['speedup_vs_ell']}")
     if csv:
         for line in lines:
             print(line)

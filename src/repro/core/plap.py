@@ -20,8 +20,10 @@ Closed forms (derived; pinned to jax autodiff in tests/test_plap.py):
 Every SpMM-shaped reduction routes through the unified GraphBLAS API
 (grblas.api.mxm) under a Descriptor — backend="auto" serves the Newton
 hot loop from the fused Pallas kernels when the BSR layout is built (on
-TPU), and the COO/ELL gather paths otherwise; there are no raw
-jax.ops.segment_sum calls left in the hot path.
+TPU), the SELL-C-σ sliced gather path when that layout is built (the
+skewed-degree scaling regime, DESIGN.md §5), and the COO/ELL gather
+paths otherwise; there are no raw jax.ops.segment_sum calls left in the
+hot path.
 
 Two HVP implementations:
   * hess_eta_graphblas  — Algorithm-1-faithful: materialize D[l] and the
@@ -102,15 +104,27 @@ def hessian_weights(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
     return W.vals[:, None] * PHI.phi_prime(d, p, eps)
 
 
-def build_alg1_operands(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float):
+def build_alg1_operands(W: SparseMatrix, U: jnp.ndarray, p: float, eps: float,
+                        desc: Optional[Descriptor] = None):
     """The paper's Algorithm-1 inputs: per column l,
        D[l] = diag(Hess A^l) / p   (vector)  and
        H[l] = off-diagonal W-hat^l (multivalues on W's pattern).
     Returned stacked over columns: D (n,k), What_vals (nnz,k).
     D is the W-hat row sums — mxv with the ones multivector."""
     what = hessian_weights(W, U, p, eps)                     # (nnz,k)
-    D = api.mxm(W.with_vals(what), jnp.ones_like(U), reals_ring)
+    Wh = W.with_vals(what)
+    D = api.mxm(Wh, jnp.ones_like(U), reals_ring,
+                desc=_multival_desc(Wh, U, desc))
     return D, what
+
+
+def _multival_desc(Wh: SparseMatrix, U, desc: Optional[Descriptor]):
+    """The caller's descriptor for the materialized-multivalue SpMMs —
+    degraded to auto when the named backend can't execute (nnz, k)
+    multivalues (e.g. edge_pallas, which is hot-loop-only), so a pinned
+    "coo"/"sellcs" really does control the whole Alg-1 HVP."""
+    return api.capable_desc(Wh, reals_ring, desc, k=U.shape[-1],
+                            dtype=U.dtype)
 
 
 def hess_eta_graphblas(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
@@ -124,16 +138,21 @@ def hess_eta_graphblas(W: SparseMatrix, U: jnp.ndarray, eta: jnp.ndarray,
       2. w  = eWiseApply(eta, D[l], mul)           [Alg.1 line 8]
       3. hA = p * (w - v)                          [Alg.1 line 9 + scale]
     then the rank-one quotient corrections (vector dots / axpys).
-    The materialized multivalues always run the COO backend (with_vals
-    drops the derived layouts), so ``desc`` only steers ``parts``.
+    The materialized multivalues run the COO backend — or the SELL-C-σ
+    layout when built: with_vals re-scatters the packed slice values
+    on-device, so Alg-1's W-hat SpMM stays on the sliced layout too.
+    ``desc`` steers ``parts`` and, when its backend can execute
+    multivalues (coo / sellcs), the W-hat SpMMs as well; hot-loop-only
+    backends (edge_pallas) degrade those two ops to "auto".
     """
     pr = parts(W, U, p, eps, desc)
     if operands is None:
-        operands = build_alg1_operands(W, U, p, eps)
+        operands = build_alg1_operands(W, U, p, eps, desc)
     D, what_vals = operands
 
     # lines 6-9 of Algorithm 1, k columns fused through one SpMM:
-    v = api.mxm(W.with_vals(what_vals), eta, reals_ring)
+    Wh = W.with_vals(what_vals)
+    v = api.mxm(Wh, eta, reals_ring, desc=_multival_desc(Wh, eta, desc))
     w = grb.e_wise_apply(eta, D, jnp.multiply)
     hA_eta = p * grb.e_wise_apply(w, v, jnp.subtract)        # Hess A @ eta
 

@@ -10,6 +10,21 @@
 Hot loops are the SpMM-shaped ops from grblas (+ Pallas kernels on TPU);
 the HVP inside tCG is the paper's Algorithm 1 (or the fused matrix-free
 variant — select with hvp_mode).
+
+Two execution-shaping knobs, both provably transparent to callers:
+
+  * ``reorder`` ("rcm" | "degree") relabels the graph with a bandwidth-
+    reducing permutation before stage 1 (graphs.reorder) — the SpMM
+    gathers then walk the multivector near-sequentially — and every
+    row-indexed output (labels, U, init_labels) is un-permuted before
+    PSCResult is built.
+  * The per-p Newton minimization is one jitted function, memoized per
+    execution signature with ``p`` as a *traced* scalar wherever the
+    backend allows (every jnp path), so the p-continuation loop hits one
+    trace for the whole schedule instead of re-tracing per level.
+    Pallas kernel paths bake (p, eps) into the kernel as static
+    arguments, so there the memo key includes p (trace per level, cached
+    across runs).
 """
 from __future__ import annotations
 
@@ -44,12 +59,17 @@ class PSCConfig:
     seed: int = 0
     # grblas execution backend for the hot loop.  The hot loop issues
     # edge-semiring ops, so the only named backends that can serve it are
-    # "coo" and (with the BSR layout built) "edge_pallas"; "auto" picks
-    # per platform.  Validated against the graph up front by
-    # p_spectral_cluster — a backend that cannot execute raises
-    # BackendUnavailableError before any work is done.
+    # "coo", (with the SELL-C-σ layout built) "sellcs", and (with the BSR
+    # layout built) "edge_pallas"; "auto" picks per platform.  Validated
+    # against the graph up front by p_spectral_cluster — a backend that
+    # cannot execute raises BackendUnavailableError before any work is
+    # done.
     backend: str = "auto"
     interpret: bool = False         # Pallas interpreter mode (numerics pin)
+    # bandwidth-reducing vertex relabeling applied before stage 1:
+    # "none" | "rcm" | "degree" (graphs.reorder).  Transparent: labels
+    # and eigenvectors are un-permuted before PSCResult is returned.
+    reorder: str = "none"
 
     def descriptor(self) -> Descriptor:
         return Descriptor(backend=self.backend, interpret=self.interpret)
@@ -86,22 +106,97 @@ class PSCResult:
     init_rcut: float = float("nan")
 
 
-def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig) -> RTRResult:
+# --- memoized jitted Newton minimization (one trace per execution
+# signature, not per continuation level) ----------------------------------
+
+_NEWTON_CACHE: dict = {}
+_NEWTON_TRACES: list = []   # one entry appended per *trace*; tests assert
+                            # the continuation loop doesn't grow it
+
+
+def _needs_static_p(cfg: PSCConfig, W: SparseMatrix, U0) -> bool:
+    """Would the backend serving the hot loop bake (p, eps) into a
+    Pallas kernel?  Then p cannot be a tracer.  The answer lives on the
+    backend registry (Backend.static_ring_params) — this probes the same
+    dispatch the hot loop will run (shape-only, like validate_backend)
+    instead of duplicating the registry's capability rules here.  Pallas
+    paths are only taken on TPU or under interpret; everywhere else the
+    jnp paths keep the traced-p single trace."""
+    if not (cfg.interpret or jax.default_backend() == "tpu"):
+        return False
+    from repro.grblas import backends as _backends
+    from repro.grblas.semiring import (plap_edge_semiring,
+                                       plap_hvp_edge_semiring)
+
     desc = cfg.descriptor()
-    f = lambda U: plap.value(W, U, p, cfg.eps, desc=desc)
-    g = lambda U: plap.euc_grad(W, U, p, cfg.eps, desc=desc)
-    if cfg.hvp_mode == "graphblas":
-        h = lambda U, eta: plap.hess_eta_graphblas(W, U, eta, p, cfg.eps,
-                                                   desc=desc)
+    probe = jax.ShapeDtypeStruct((W.n_rows, U0.shape[-1]), U0.dtype)
+    probes = [(plap_edge_semiring(2.0, cfg.eps), probe)]
+    if cfg.hvp_mode == "matrix_free":
+        probes.append((plap_hvp_edge_semiring(2.0, cfg.eps), (probe, probe)))
+    for ring, X in probes:
+        try:
+            be = _backends.select_backend(W, X, ring, desc)
+        except _backends.BackendUnavailableError:
+            continue          # validate_backend already raised for real runs
+        if be.static_ring_params:
+            return True
+    return False
+
+
+def _jitted_minimize(cfg: PSCConfig, p: float, W: SparseMatrix, U0):
+    """The jitted per-p trust-region minimization, memoized per
+    (backend, interpret, hvp_mode, eps, iteration budget[, p]).  W rides
+    along as a pytree argument, so one cached callable serves every
+    graph of matching layout signature."""
+    static_p = float(p) if _needs_static_p(cfg, W, U0) else None
+    key = (cfg.backend, cfg.interpret, cfg.hvp_mode, cfg.eps,
+           cfg.newton_iters, cfg.tcg_iters, cfg.grad_tol, static_p)
+    fn = _NEWTON_CACHE.get(key)
+    if fn is not None:
+        return fn, static_p
+
+    desc = cfg.descriptor()
+    eps, hvp_mode = cfg.eps, cfg.hvp_mode
+    newton_iters, tcg_iters, grad_tol = (cfg.newton_iters, cfg.tcg_iters,
+                                         cfg.grad_tol)
+
+    def run(W, U0, p_run):
+        _NEWTON_TRACES.append(key)
+        f = lambda U: plap.value(W, U, p_run, eps, desc=desc)
+        g = lambda U: plap.euc_grad(W, U, p_run, eps, desc=desc)
+        if hvp_mode == "graphblas":
+            h = lambda U, eta: plap.hess_eta_graphblas(W, U, eta, p_run, eps,
+                                                       desc=desc)
+        else:
+            h = lambda U, eta: plap.hess_eta_matrix_free(W, U, eta, p_run,
+                                                         eps, desc=desc)
+        return rtr_minimize(f, g, h, U0, max_iters=newton_iters,
+                            tcg_iters=tcg_iters, grad_tol=grad_tol)
+
+    if static_p is None:
+        fn = jax.jit(run)
     else:
-        h = lambda U, eta: plap.hess_eta_matrix_free(W, U, eta, p, cfg.eps,
-                                                     desc=desc)
-    return rtr_minimize(f, g, h, U0, max_iters=cfg.newton_iters,
-                        tcg_iters=cfg.tcg_iters, grad_tol=cfg.grad_tol)
+        fn = jax.jit(lambda W, U0: run(W, U0, static_p))
+    _NEWTON_CACHE[key] = fn
+    return fn, static_p
+
+
+def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig) -> RTRResult:
+    fn, static_p = _jitted_minimize(cfg, p, W, U0)
+    if static_p is not None:
+        return fn(W, U0)
+    # p rides in U0's dtype so float64 pipelines keep the full-precision
+    # continuation values the pre-memoized code passed as Python floats
+    return fn(W, U0, jnp.asarray(p, U0.dtype))
 
 
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     """Run the full GrB-pGrass pipeline on graph W."""
+    inv = None
+    if cfg.reorder != "none":
+        from repro.graphs.reorder import reorder as _reorder
+
+        W, _, inv = _reorder(W, method=cfg.reorder)
     cfg.validate_backend(W)
     key = jax.random.PRNGKey(cfg.seed)
 
@@ -137,12 +232,23 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
                           iters=cfg.kmeans_iters)
 
+    # cut metrics are computed in whichever labeling W currently has —
+    # they are permutation-invariant — then every row-indexed output is
+    # mapped back to the caller's vertex ids (inv[old] = new).
+    rcut = float(metrics.rcut(W, labels, cfg.k))
+    ncut = float(metrics.ncut(W, labels, cfg.k))
+    labels = np.asarray(labels)
+    init_labels = np.asarray(init_labels)
+    if inv is not None:
+        labels = labels[inv]
+        init_labels = init_labels[inv]
+        U = U[jnp.asarray(inv)]
+
     return PSCResult(
-        labels=np.asarray(labels), U=U,
-        rcut=float(metrics.rcut(W, labels, cfg.k)),
-        ncut=float(metrics.ncut(W, labels, cfg.k)),
+        labels=labels, U=U,
+        rcut=rcut, ncut=ncut,
         p_path=p_path, fvals=fvals, hvp_counts=hvps,
-        init_labels=np.asarray(init_labels), init_rcut=init_rcut)
+        init_labels=init_labels, init_rcut=init_rcut)
 
 
 def spectral_cluster(W: SparseMatrix, k: int, seed: int = 0,

@@ -10,3 +10,8 @@ __all__ = [
 from repro.graphs.partition import partition, cut_edges
 
 __all__ += ["partition", "cut_edges"]
+from repro.graphs.reorder import (
+    reorder, rcm_ordering, degree_ordering, bandwidth,
+)
+
+__all__ += ["reorder", "rcm_ordering", "degree_ordering", "bandwidth"]

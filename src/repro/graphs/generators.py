@@ -30,13 +30,12 @@ def _symmetrize(rows, cols, vals, n):
     return r[idx], c[idx], v[idx]
 
 
-def _to_matrix(rows, cols, vals, n, build_ell=True, build_bsr=False,
-               block_size=128) -> SparseMatrix:
+def _to_matrix(rows, cols, vals, n, **kw) -> SparseMatrix:
+    """kw passes through to from_coo (build_ell / build_bsr / block_size /
+    build_sellcs / sell_c / sell_sigma)."""
     rows, cols, vals = _symmetrize(np.asarray(rows), np.asarray(cols),
                                    np.asarray(vals, np.float64), n)
-    return SparseMatrix.from_coo(rows, cols, vals, (n, n),
-                                 build_ell=build_ell, build_bsr=build_bsr,
-                                 block_size=block_size)
+    return SparseMatrix.from_coo(rows, cols, vals, (n, n), **kw)
 
 
 def delaunay_graph(r: int, seed: int = 0, locality_order: bool = True,

@@ -28,7 +28,7 @@ from repro.grblas.semiring import (
     register_ring_fast_paths,
     fast_paths,
 )
-from repro.grblas.containers import SparseMatrix
+from repro.grblas.containers import SELLCS_AUTO_THRESHOLD, SparseMatrix
 from repro.grblas.api import (
     Descriptor,
     BackendUnavailableError,
@@ -46,7 +46,8 @@ __all__ = [
     "min_plus_ring", "max_times_ring", "boolean_ring",
     "plap_edge_semiring", "plap_hvp_edge_semiring",
     "register_ring_fast_paths", "fast_paths",
-    "SparseMatrix", "Descriptor", "BackendUnavailableError",
+    "SparseMatrix", "SELLCS_AUTO_THRESHOLD", "Descriptor",
+    "BackendUnavailableError",
     "mxm", "mxv", "vxm", "available_backends",
     "register_backend", "registered_backends",
     "e_wise_apply", "apply", "grb_reduce",

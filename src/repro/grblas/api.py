@@ -10,14 +10,17 @@ The ``Descriptor`` replaces the old scatter of ``use_ell`` /
 ``use_pallas`` flags and parallel entry points (ops.mxm,
 kernels.bsr_spmm.bsr_spmm, kernels.plap_edge.plap_apply, dist.dist_mxm):
 
-    backend    "auto" | "coo" | "ell" | "bsr_pallas" | "edge_pallas" | "dist"
+    backend    "auto" | "coo" | "ell" | "sellcs" | "bsr_pallas" |
+               "edge_pallas" | "dist"
     transpose  operate on A^T (COO index-role swap; vxm flips this)
     interpret  run Pallas kernels in interpreter mode (CPU numerics pin)
     mesh/axis  device mesh + axis name for the "dist" backend
 
 "auto" picks the first capable backend in platform-priority order
-(grblas.backends): Pallas kernels first on TPU, ELL/COO first on CPU,
-"dist" whenever a mesh is supplied.  A named backend that cannot execute
+(grblas.backends): Pallas kernels first on TPU, SELL-C-σ/ELL/COO first
+on CPU ("sellcs" outranks full ELL exactly when the ELL fill ratio
+crosses SELLCS_AUTO_THRESHOLD — see DESIGN.md §5), "dist" whenever a
+mesh is supplied.  A named backend that cannot execute
 the operands raises BackendUnavailableError instead of silently falling
 back — layout availability (ELL/BSR built?), ring kind, and multivector
 shape are all part of the capability check.

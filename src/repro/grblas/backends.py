@@ -15,8 +15,16 @@ Registered backends (priority: lower = preferred under "auto"):
   dist         ELL / row-part  reals, edge (reals base)      0    0  (needs desc.mesh)
   edge_pallas  BSR tiles       plap_apply / plap_hvp kinds  61   10
   bsr_pallas   BSR tiles       reals                        60   11
+  sellcs       SELL-C-σ        padded-reducer rings (incl.  19   12
+                               multivals) + plap edge kinds
   ell          padded ELL      rings with a padded reducer  20   20
   coo          COO (always)    any ring, transpose, multivals 30 30
+
+"sellcs" sits above full-ELL in the auto order but *defers* to ELL when
+the matrix's ELL fill ratio is under SELLCS_AUTO_THRESHOLD — on low-skew
+graphs the two layouts do the same work and ELL has no permute step; on
+skewed-degree graphs the sliced layout's per-slice padding is the whole
+point (DESIGN.md §5).  Naming backend="sellcs" explicitly always runs.
 
 The Pallas kernels rank first on TPU and last on CPU: their jnp
 reference paths exist everywhere (and run under ``desc.interpret``),
@@ -34,7 +42,7 @@ from typing import Callable, Dict
 import jax
 import jax.numpy as jnp
 
-from repro.grblas.containers import SparseMatrix
+from repro.grblas.containers import SELLCS_AUTO_THRESHOLD, SparseMatrix
 from repro.grblas.semiring import (
     EdgeSemiring,
     PairEdgeSemiring,
@@ -54,19 +62,25 @@ class Backend:
     execute: Callable       # (A, X, ring, desc) -> jnp.ndarray
     cpu_priority: int       # auto-selection rank off-TPU (lower wins)
     tpu_priority: int       # auto-selection rank on TPU
+    # True when this backend's Pallas path (taken on TPU or under
+    # desc.interpret) bakes the ring's (p, eps) params into the kernel
+    # as static arguments — callers that jit over a *traced* p (the
+    # psc continuation loop) must concretize p before reaching it.
+    static_ring_params: bool = False
 
 
 _REGISTRY: Dict[str, Backend] = {}
 
 
 def register_backend(name: str, *, cpu_priority: int, tpu_priority: int,
-                     supports: Callable):
+                     supports: Callable, static_ring_params: bool = False):
     """Decorator: register ``fn`` as the execute hook of backend ``name``."""
 
     def deco(fn):
         _REGISTRY[name] = Backend(name=name, supports=supports, execute=fn,
                                   cpu_priority=cpu_priority,
-                                  tpu_priority=tpu_priority)
+                                  tpu_priority=tpu_priority,
+                                  static_ring_params=static_ring_params)
         return fn
 
     return deco
@@ -208,6 +222,114 @@ def _ell_execute(A, X, ring, desc):
     return fast_paths(ring).padded(contrib)
 
 
+# ------------------------------------------------------------ sellcs backend
+
+def _auto_defers_to_ell(A, X, ring, desc) -> bool:
+    """Under "auto", keep low-fill matrices on the plain full-ELL path:
+    sellcs only outranks ELL once ELL's padding blowup crosses
+    SELLCS_AUTO_THRESHOLD — the skewed-degree regime the sliced layout
+    exists for.  A named backend="sellcs" always runs."""
+    return (desc.backend == "auto"
+            and _ell_supports(A, X, ring, desc)
+            and A.ell_fill_ratio() <= SELLCS_AUTO_THRESHOLD)
+
+
+def _sellcs_supports(A, X, ring, desc):
+    if not (isinstance(A, SparseMatrix) and A.sell_cols is not None
+            and not desc.transpose):
+        return False
+    if isinstance(ring, PairEdgeSemiring):
+        return (ring.kind == "plap_hvp" and A.vals.ndim == 1 and _square(A)
+                and _is_pair(X) and len(X) == 2
+                and getattr(X[0], "ndim", 0) == 2
+                and X[0].shape == X[1].shape)
+    if isinstance(ring, EdgeSemiring):
+        # pad entries are (col=self, val=0): sound exactly for edge kinds
+        # whose multiply annihilates on w=0 — the known plap kind, not
+        # generic closures (same reasoning as the dist backend gate).
+        return (ring.kind == "plap_apply" and A.vals.ndim == 1 and _square(A)
+                and not _is_pair(X) and getattr(X, "ndim", 0) in (1, 2))
+    if not (isinstance(ring, Semiring) and not _is_pair(X)
+            and getattr(X, "ndim", 0) in (1, 2)
+            and fast_paths(ring).padded is not None
+            and _vals_match(A, X)):
+        return False
+    return not _auto_defers_to_ell(A, X, ring, desc)
+
+
+def sellcs_run(A, X, ring, interpret: bool = False,
+               use_pallas: bool | None = None):
+    """SELL-C-σ SpMM with explicit path control (shared by the backend
+    and the benchmarks).  Permute the multivector once (σ-sort order),
+    run one gather+fold per width run — Pallas kernel (TPU / interpret)
+    or the jnp reference — and un-permute the output.
+
+    ``X`` is a multivector for plain/edge rings, a (U, Eta) pair for the
+    "plap_hvp" kind.  (nnz, k) multivalues (with_vals) take the jnp path
+    — the Alg-1 materialized W-hat is CPU-bound host-side anyway."""
+    from repro.kernels.sellcs_spmm import (
+        sellcs_plap_apply_pallas, sellcs_plap_apply_ref,
+        sellcs_plap_hvp_pallas, sellcs_plap_hvp_ref,
+        sellcs_spmm_pallas, sellcs_spmm_ref)
+
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu" or interpret
+    C = A.sell_c
+    pair = _is_pair(X)
+    one_d = False
+    if pair:
+        U, E = X
+        Up, Ep = U[A.sell_perm], E[A.sell_perm]
+    else:
+        one_d = X.ndim == 1
+        Xp = (X[:, None] if one_d else X)[A.sell_perm]
+
+    outs = []
+    for r, cols in enumerate(A.sell_cols):
+        vals = A.sell_vals[r]
+        row0 = A.sell_row0[r]
+        if isinstance(ring, PairEdgeSemiring):
+            p, eps = ring.params
+            if use_pallas:
+                Yr = sellcs_plap_hvp_pallas(cols, vals, Up, Ep, C,
+                                            slice0=row0 // C, p=float(p),
+                                            eps=float(eps),
+                                            interpret=interpret)
+            else:
+                Yr = sellcs_plap_hvp_ref(cols, vals, Up, Ep, row0, p, eps)
+        elif isinstance(ring, EdgeSemiring):
+            p, eps = ring.params
+            if use_pallas:
+                Yr = sellcs_plap_apply_pallas(cols, vals, Xp, C,
+                                              slice0=row0 // C, p=float(p),
+                                              eps=float(eps),
+                                              interpret=interpret)
+            else:
+                Yr = sellcs_plap_apply_ref(cols, vals, Xp, row0, p, eps)
+        elif (use_pallas and vals.ndim == 2 and ring.name == "reals_+x"):
+            Yr = sellcs_spmm_pallas(cols, vals, Xp, C, slice0=row0 // C,
+                                    interpret=interpret)
+        elif ring.name == "reals_+x":
+            Yr = sellcs_spmm_ref(cols, vals, Xp)
+        else:
+            vb = vals[..., None] if vals.ndim == 2 else vals
+            Yr = fast_paths(ring).padded(ring.mul(vb, Xp[cols]))
+        outs.append(Yr)
+
+    Y = jnp.concatenate(outs, axis=0)[A.sell_inv]      # un-permute, drop pads
+    return Y[:, 0] if (one_d and not pair) else Y
+
+
+@register_backend("sellcs", cpu_priority=19, tpu_priority=12,
+                  supports=_sellcs_supports, static_ring_params=True)
+def _sellcs_execute(A, X, ring, desc):
+    """Sliced-ELLPACK gather + ring fold over per-width runs; Pallas
+    kernel on TPU (or under ``desc.interpret``), vectorized jnp on CPU.
+    The σ permutation is applied to the multivector on the way in and
+    inverted on the way out — callers never observe it."""
+    return sellcs_run(A, X, ring, interpret=desc.interpret)
+
+
 # -------------------------------------------------------- bsr_pallas backend
 
 def _pad_rows(n_pad_rows, *Xs):
@@ -314,7 +436,7 @@ def edge_pallas_run(A, X, ring, interpret: bool = False,
 
 
 @register_backend("edge_pallas", cpu_priority=61, tpu_priority=10,
-                  supports=_edge_pallas_supports)
+                  supports=_edge_pallas_supports, static_ring_params=True)
 def _edge_pallas_execute(A, X, ring, desc):
     """Fused p-Laplacian edge-semiring kernels over BSR tiles.
 

@@ -8,11 +8,19 @@ over shape/dtype sweeps in tests/test_kernels_*.py.
 from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_ref
 from repro.kernels.plap_edge import (
     plap_apply, plap_hvp_edge, plap_apply_ref, plap_hvp_edge_ref)
+from repro.kernels.sellcs_spmm import (
+    sellcs_spmm_pallas, sellcs_spmm_ref,
+    sellcs_plap_apply_pallas, sellcs_plap_apply_ref,
+    sellcs_plap_hvp_pallas, sellcs_plap_hvp_ref)
 from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
 from repro.kernels.flash_attention import flash_attention, attention_ref
 
 __all__ = [
     "bsr_spmm", "bsr_spmm_ref", "plap_apply", "plap_hvp_edge",
-    "plap_apply_ref", "plap_hvp_edge_ref", "kmeans_assign",
-    "kmeans_assign_ref", "flash_attention", "attention_ref",
+    "plap_apply_ref", "plap_hvp_edge_ref",
+    "sellcs_spmm_pallas", "sellcs_spmm_ref",
+    "sellcs_plap_apply_pallas", "sellcs_plap_apply_ref",
+    "sellcs_plap_hvp_pallas", "sellcs_plap_hvp_ref",
+    "kmeans_assign", "kmeans_assign_ref",
+    "flash_attention", "attention_ref",
 ]

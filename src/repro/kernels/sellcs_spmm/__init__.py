@@ -1,0 +1,18 @@
+# Import the impl module FIRST so the submodule attribute is bound before
+# the function names below (same ordering contract as kernels/bsr_spmm).
+import repro.kernels.sellcs_spmm.sellcs_spmm  # noqa: F401
+from repro.kernels.sellcs_spmm.sellcs_spmm import (
+    sellcs_spmm_pallas,
+    sellcs_plap_apply_pallas,
+    sellcs_plap_hvp_pallas,
+)
+from repro.kernels.sellcs_spmm.ref import (
+    sellcs_spmm_ref,
+    sellcs_plap_apply_ref,
+    sellcs_plap_hvp_ref,
+)
+
+__all__ = [
+    "sellcs_spmm_pallas", "sellcs_plap_apply_pallas", "sellcs_plap_hvp_pallas",
+    "sellcs_spmm_ref", "sellcs_plap_apply_ref", "sellcs_plap_hvp_ref",
+]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the SELL-C-σ SpMM kernels.
+
+Operate on one width run of the sliced layout (containers._build_sellcs):
+cols/vals (rows_r, w) in the PERMUTED row space, multivectors already
+σ-permuted to (n_pad, k).  These are also the vectorized CPU execution
+path of the "sellcs" backend — per-run gather + ring fold, the sliced
+analogue of the full-ELL gather path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import phi as PHI
+
+
+def sellcs_spmm_ref(cols, vals, Xp):
+    """Reals-ring run: y = sum_w vals * Xp[cols].  vals may be (rows, w)
+    or (rows, w, k) multivalues (with_vals' Alg-1 W-hat)."""
+    g = Xp[cols]                                   # (rows, w, k)
+    v = vals[..., None] if vals.ndim == 2 else vals
+    return jnp.sum(v * g, axis=1)
+
+
+def sellcs_plap_apply_ref(cols, vals, Xp, row0: int, p: float, eps: float):
+    """p-Laplacian apply run: y_i = sum_j w_ij phi_p(x_i - x_j)."""
+    g = Xp[cols]                                   # x_j  (rows, w, k)
+    x_i = Xp[row0:row0 + cols.shape[0]][:, None, :]
+    return jnp.sum(vals[..., None] * PHI.phi(x_i - g, p, eps), axis=1)
+
+
+def sellcs_plap_hvp_ref(cols, vals, Up, Ep, row0: int, p: float, eps: float):
+    """Newton HVP run: y_i = sum_j w_ij phi'(u_i-u_j)(e_i-e_j)."""
+    rows = cols.shape[0]
+    du = Up[row0:row0 + rows][:, None, :] - Up[cols]
+    de = Ep[row0:row0 + rows][:, None, :] - Ep[cols]
+    return jnp.sum(vals[..., None] * PHI.phi_prime(du, p, eps) * de, axis=1)

@@ -32,7 +32,8 @@ def _graph(symmetric: bool, n=96, density=0.08, seed=0, dtype=jnp.float32):
     if symmetric:
         A = A + A.T
     return SparseMatrix.from_scipy(A, build_bsr=True, block_size=BS,
-                                   dtype=dtype)
+                                   dtype=dtype, build_sellcs=True,
+                                   sell_c=8, sell_sigma=32)
 
 
 def _X(M, k=4, seed=1, dtype=jnp.float32):
@@ -43,8 +44,17 @@ def _X(M, k=4, seed=1, dtype=jnp.float32):
 REALS_DESCRIPTORS = [
     Descriptor(backend="coo"),
     Descriptor(backend="ell"),
+    Descriptor(backend="sellcs"),                      # sliced gather (CPU)
+    Descriptor(backend="sellcs", interpret=True),      # Pallas interpreter
     Descriptor(backend="bsr_pallas"),                  # jnp blocked ref (CPU)
     Descriptor(backend="bsr_pallas", interpret=True),  # Pallas interpreter
+]
+
+EDGE_DESCRIPTORS = [
+    Descriptor(backend="edge_pallas"),
+    Descriptor(backend="edge_pallas", interpret=True),
+    Descriptor(backend="sellcs"),
+    Descriptor(backend="sellcs", interpret=True),
 ]
 
 
@@ -85,11 +95,12 @@ def test_plap_apply_backends_agree(symmetric, p):
     X = _X(M)
     ring = plap_edge_semiring(p, eps=1e-6)
     want = np.asarray(mxm(M, X, ring, desc=Descriptor(backend="coo")))
-    for desc in (Descriptor(backend="edge_pallas"),
-                 Descriptor(backend="edge_pallas", interpret=True)):
+    for desc in EDGE_DESCRIPTORS:
         got = np.asarray(mxm(M, X, ring, desc=desc))
-        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5,
-                                   err_msg=f"p={p} interpret={desc.interpret}")
+        np.testing.assert_allclose(
+            got, want, rtol=2e-4, atol=1e-5,
+            err_msg=f"p={p} backend={desc.backend} "
+                    f"interpret={desc.interpret}")
 
 
 @pytest.mark.parametrize("p", PS)
@@ -103,11 +114,12 @@ def test_plap_hvp_backends_agree(symmetric, p):
     Eta = jnp.asarray(rng.standard_normal((M.n_rows, 3)) * 0.1, jnp.float32)
     ring = plap_hvp_edge_semiring(p, eps=1e-6)
     want = np.asarray(mxm(M, (U, Eta), ring, desc=Descriptor(backend="coo")))
-    for desc in (Descriptor(backend="edge_pallas"),
-                 Descriptor(backend="edge_pallas", interpret=True)):
+    for desc in EDGE_DESCRIPTORS:
         got = np.asarray(mxm(M, (U, Eta), ring, desc=desc))
-        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5,
-                                   err_msg=f"p={p} interpret={desc.interpret}")
+        np.testing.assert_allclose(
+            got, want, rtol=2e-4, atol=1e-5,
+            err_msg=f"p={p} backend={desc.backend} "
+                    f"interpret={desc.interpret}")
 
 
 @pytest.mark.parametrize("symmetric", [True, False],
@@ -138,6 +150,41 @@ def test_generic_rings_match_dense_oracle(symmetric):
     xb = x > 1.0
     got = np.asarray(mxv(M, jnp.asarray(xb), boolean_ring))
     np.testing.assert_array_equal(got, (dense != 0) @ xb)
+
+
+@pytest.mark.parametrize("symmetric", [True, False],
+                         ids=["symmetric", "asymmetric"])
+def test_with_vals_multivalues_on_sellcs(symmetric):
+    """Alg-1's materialized W-hat ((nnz, k) multivalues on the fixed
+    pattern) must execute identically on the sliced layout: with_vals
+    re-scatters the packed slice values on-device."""
+    M = _graph(symmetric)
+    X = _X(M)
+    rng = np.random.default_rng(7)
+    mv = jnp.asarray(rng.standard_normal((M.nnz, X.shape[1])), jnp.float32)
+    Wv = M.with_vals(mv)
+    assert Wv.sell_cols is not None
+    want = np.asarray(mxm(Wv, X, desc=Descriptor(backend="coo")))
+    got = np.asarray(mxm(Wv, X, desc=Descriptor(backend="sellcs")))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["rcm", "degree"])
+def test_reorder_round_trip_labels_invariant(method):
+    """PSCConfig.reorder must be invisible to callers: identical labels
+    (same vertex ids), identical cut metrics."""
+    from repro.core import metrics
+    from repro.core.psc import PSCConfig, p_spectral_cluster
+    from repro.graphs import ring_of_cliques
+
+    W, _ = ring_of_cliques(4, 12)
+    kw = dict(k=4, p_target=1.6, newton_iters=4, tcg_iters=5,
+              kmeans_restarts=3, kmeans_iters=20, seed=0)
+    base = p_spectral_cluster(W, PSCConfig(**kw))
+    perm = p_spectral_cluster(W, PSCConfig(reorder=method, **kw))
+    assert metrics.clustering_accuracy(base.labels, perm.labels, 4) == 1.0
+    np.testing.assert_allclose(perm.rcut, base.rcut, rtol=1e-4)
+    np.testing.assert_allclose(perm.ncut, base.ncut, rtol=1e-4)
 
 
 def test_plap_hot_loop_matches_through_bsr_descriptor():

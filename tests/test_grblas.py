@@ -90,7 +90,7 @@ def test_bsr_layout_roundtrip(rng):
     for b in range(len(rb)):
         dense[rb[b]*bs:(rb[b]+1)*bs, cb[b]*bs:(cb[b]+1)*bs] = blocks[b]
     np.testing.assert_allclose(dense[:100, :100], A.toarray(), rtol=1e-10)
-    assert M.fill_ratio >= 1.0
+    assert M.bsr_fill_ratio() >= 1.0
 
 
 def test_row_degrees_and_sums(rng):

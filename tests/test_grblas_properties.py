@@ -100,6 +100,62 @@ def test_boolean_ring_is_reachability(seed):
     np.testing.assert_array_equal(got, want.astype(bool))
 
 
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       p=st.sampled_from([1.2, 1.5, 2.0]),
+       C=st.sampled_from([4, 8, 16]),
+       sigma=st.sampled_from([8, 32, None]))
+def test_sellcs_equals_coo_across_rings(seed, p, C, sigma):
+    """The sliced layout is a pure execution detail: sellcs == coo for
+    the reals ring (1-D and multivector), the p-Laplacian apply, and the
+    Newton-HVP pair ring, on arbitrary symmetric patterns x (C, σ)."""
+    import scipy.sparse as sp
+    from repro.grblas import (Descriptor, mxm, plap_edge_semiring,
+                              plap_hvp_edge_semiring)
+
+    A = sp.random(48, 48, density=0.12,
+                  random_state=np.random.RandomState(seed % 9973))
+    A = A + A.T
+    M = SparseMatrix.from_scipy(A, build_sellcs=True, sell_c=C,
+                                sell_sigma=sigma)
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.standard_normal((48, 3)), jnp.float32)
+    coo, sell = Descriptor(backend="coo"), Descriptor(backend="sellcs")
+
+    got = np.asarray(mxm(M, X, desc=sell))
+    np.testing.assert_allclose(got, np.asarray(mxm(M, X, desc=coo)),
+                               rtol=1e-4, atol=1e-5)
+    ring = plap_edge_semiring(p, eps=1e-6)
+    np.testing.assert_allclose(np.asarray(mxm(M, X, ring, desc=sell)),
+                               np.asarray(mxm(M, X, ring, desc=coo)),
+                               rtol=1e-4, atol=1e-5)
+    Eta = jnp.asarray(rng.standard_normal((48, 3)) * 0.1, jnp.float32)
+    hring = plap_hvp_edge_semiring(p, eps=1e-6)
+    np.testing.assert_allclose(np.asarray(mxm(M, (X, Eta), hring, desc=sell)),
+                               np.asarray(mxm(M, (X, Eta), hring, desc=coo)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1),
+       method=st.sampled_from(["rcm", "degree"]))
+def test_reorder_leaves_cut_metrics_invariant(seed, method):
+    """Graph relabeling under graphs.reorder must not move RCut/NCut:
+    metrics on (W2, labels[perm]) equal metrics on (W, labels)."""
+    from repro.graphs import reorder
+
+    W, truth = ring_of_cliques(4, 6)
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 4, W.n_rows)
+    W2, perm, _ = reorder(W, method)
+    a = float(metrics.rcut(W, labels, 4))
+    b = float(metrics.rcut(W2, labels[perm], 4))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+    an = float(metrics.ncut(W, labels, 4))
+    bn = float(metrics.ncut(W2, labels[perm], 4))
+    np.testing.assert_allclose(an, bn, rtol=1e-5)
+
+
 def test_kmeans_inertia_decreases():
     from repro.core.kmeans import lloyd, pairwise_sqdist
     import jax

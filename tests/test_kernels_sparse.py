@@ -74,4 +74,4 @@ def test_plap_hvp_kernel(n, bs, k, p):
 
 def test_bsr_fill_ratio_reported():
     M = _mat(256, 64)
-    assert np.isfinite(M.fill_ratio) and M.fill_ratio >= 1.0
+    assert np.isfinite(M.bsr_fill_ratio()) and M.bsr_fill_ratio() >= 1.0

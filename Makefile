@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test dryrun-smoke bench-kernels
+.PHONY: verify imports test dryrun-smoke bench-kernels bench-multilevel
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -15,7 +15,15 @@ test:
 dryrun-smoke:
 	$(PY) -m pytest -x -q tests/test_dryrun_smoke.py
 
-# Regenerates the committed BENCH_backends.json + BENCH_sellcs.json
-# (backend-descriptor sweep and the SELL-C-σ C x sigma x reorder sweep).
+# Regenerates the committed BENCH_backends.json + BENCH_sellcs.json +
+# BENCH_multilevel.json (backend-descriptor sweep, the SELL-C-σ
+# C x sigma x reorder sweep, and the flat-vs-V-cycle sweep — the last
+# one solves 131k-524k-node graphs end to end, budget ~20-30 min on CPU;
+# use bench-multilevel to rerun just that piece).
 bench-kernels:
 	$(PY) benchmarks/kernels_bench.py
+
+bench-multilevel:
+	$(PY) -c "from pathlib import Path; \
+	import benchmarks.kernels_bench as b; \
+	b.sweep_multilevel(out_path=Path('BENCH_multilevel.json'))"

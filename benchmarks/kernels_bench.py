@@ -10,7 +10,10 @@ bsr_pallas-ref / bsr_pallas-interpret / edge coo vs ref) on one
 synthetic graph and emits BENCH_backends.json at the repo root so later
 PRs have a perf trajectory for the dispatch table, plus the SELL-C-σ
 sweep (C x sigma x reorder vs coo/ell, skewed-degree + delaunay) into
-BENCH_sellcs.json.  ``make bench-kernels`` regenerates both.
+BENCH_sellcs.json, plus the flat-vs-multilevel V-cycle sweep
+(131k-524k-node graphs, DESIGN.md §6) into BENCH_multilevel.json.
+``make bench-kernels`` regenerates all three; ``make bench-multilevel``
+reruns just the last (it solves big graphs end to end — the long pole).
 """
 from __future__ import annotations
 
@@ -153,6 +156,86 @@ def sweep_sellcs(k=4, out_path=None, reps=20):
     return payload
 
 
+# ------------------------------------------------- multilevel V-cycle sweep
+
+def sweep_multilevel(out_path=None, k=4, seed=0):
+    """Flat solver vs the multilevel V-cycle (repro.multilevel) across
+    hierarchy depths × graph sizes, recording RCut + end-to-end wall
+    clock.  Emits BENCH_multilevel.json — the committed evidence for the
+    DESIGN.md §6 claim (≥3× end-to-end at ≥100k nodes within 1% RCut).
+
+    Graph families mirror the paper's evaluation: delaunay
+    triangulations (delaunay_nXX) and a planted-partition SBM in the
+    sparse regime (sbm_graph_sparse — the dense generator is O(n²)).
+    The 524k-node delaunay runs flat once for the scaling point; the
+    depth sweep lives on the ~131k graphs to keep the bench re-runnable.
+    """
+    import dataclasses
+
+    from repro.core import PSCConfig, p_spectral_cluster
+    from repro.graphs import sbm_graph_sparse
+    from repro.multilevel import MultilevelConfig
+
+    base = PSCConfig(k=k, p_target=1.4, newton_iters=15, tcg_iters=12,
+                     kmeans_restarts=4, seed=seed)
+    graphs = [
+        ("delaunay_r17", lambda: delaunay_graph(17, seed=seed)[0], (3, 12)),
+        # weighted planted partition (w_in > w_out, similarity-graph
+        # style): degrees dense enough that no vertex is isolated (an
+        # isolated vertex makes RCut trivially 0) and the planted cut is
+        # the unambiguous optimum — in the *unit-weight* sparse regime
+        # the blocks are locally invisible (no triangles, equal
+        # degrees), so any locality-based coarsening — ours or
+        # Metis-style — loses them while global eigenvectors keep them;
+        # that regime measures generator degeneracy, not solver quality
+        ("sbm_131k", lambda: sbm_graph_sparse(
+            [32768] * k, deg_in=16.0, deg_out=4.0, w_in=2.0, w_out=1.0,
+            seed=seed)[0], (3, 12)),
+        ("delaunay_r19", lambda: delaunay_graph(19, seed=seed)[0], (12,)),
+    ]
+    payload = {"platform": jax.default_backend(), "k": k,
+               "config": {"p_target": base.p_target,
+                          "newton_iters": base.newton_iters,
+                          "tcg_iters": base.tcg_iters}, "graphs": []}
+    for name, make, depths in graphs:
+        W = make()
+        t0 = time.time()
+        rf = p_spectral_cluster(W, base)
+        t_flat = time.time() - t0
+        entry = {
+            "graph": name, "n": W.n_rows, "nnz": W.nnz,
+            "flat": {"rcut": float(rf.rcut), "wall_s": round(t_flat, 2),
+                     "init_rcut": float(rf.init_rcut)},
+            "vcycle": [],
+        }
+        for depth in depths:
+            cfg = dataclasses.replace(
+                base, multilevel=MultilevelConfig(max_levels=depth))
+            t0 = time.time()
+            rm = p_spectral_cluster(W, cfg)
+            t_ml = time.time() - t0
+            recs = rm.levels or []
+            n_levels = recs[0]["n_levels"] if recs else 1
+            entry["vcycle"].append({
+                "max_levels": depth, "hierarchy_levels": n_levels,
+                "levels_refined": len({r["level"] for r in recs}),
+                "rcut": float(rm.rcut), "wall_s": round(t_ml, 2),
+                "speedup_vs_flat": round(t_flat / t_ml, 2),
+                "rcut_gap_pct": round(
+                    (float(rm.rcut) - float(rf.rcut))
+                    / max(float(rf.rcut), 1e-12) * 100.0, 3),
+            })
+        best = max(entry["vcycle"], key=lambda e: e["speedup_vs_flat"])
+        entry["best_vcycle"] = best
+        payload["graphs"].append(entry)
+        print(f"[multilevel] {name}: flat {t_flat:.1f}s rcut={rf.rcut:.5f}; "
+              f"best vcycle {best['wall_s']}s ({best['speedup_vs_flat']}x, "
+              f"gap {best['rcut_gap_pct']}%)")
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
 def main(csv=True):
     lines = []
     W, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=128)
@@ -194,6 +277,13 @@ def main(csv=True):
                      f"C={b['C']}_sigma={b['sigma']}_reorder={b['reorder']}"
                      f"_fill={b['fill_ratio']}"
                      f"_speedup_vs_ell={g['speedup_vs_ell']}")
+    ml = sweep_multilevel(out_path=_ROOT / "BENCH_multilevel.json")
+    for g in ml["graphs"]:
+        b = g["best_vcycle"]
+        lines.append(f"multilevel_{g['graph']},{b['wall_s']},"
+                     f"levels={b['hierarchy_levels']}"
+                     f"_speedup_vs_flat={b['speedup_vs_flat']}"
+                     f"_rcut_gap_pct={b['rcut_gap_pct']}")
     if csv:
         for line in lines:
             print(line)

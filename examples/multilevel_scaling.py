@@ -1,0 +1,57 @@
+"""Multilevel V-cycle vs flat GrB-pGrass on a mid-size Delaunay graph —
+the DESIGN.md §6 scaling story in miniature.
+
+The flat solver pays O(nnz) per Newton iteration on the fine graph; the
+V-cycle coarsens with heavy-edge matching (Galerkin Pᵀ W P through
+grblas.api.mxm's spgemm backend), runs the whole p-continuation on the
+coarsest graph, and walks back up with prolong → re-orthonormalize →
+a few refinement Newton steps.  Same labels contract, same metrics,
+several times faster — and the gap widens with graph size
+(BENCH_multilevel.json has the 131k/524k-node numbers).
+
+    PYTHONPATH=src python examples/multilevel_scaling.py
+"""
+import dataclasses
+import time
+
+from repro.core import PSCConfig, p_spectral_cluster
+from repro.graphs import delaunay_graph
+from repro.multilevel import MultilevelConfig, build_hierarchy
+
+
+def main():
+    W, _ = delaunay_graph(15, seed=0)       # 32768 nodes, ~196k nnz
+    print(f"graph: n={W.n_rows} nnz={W.nnz}")
+
+    # the hierarchy alone: heavy-edge matching halves the graph per level
+    h = build_hierarchy(W, coarse_size=2048)
+    sizes = " -> ".join(str(l.W.n_rows) for l in h.levels)
+    print(f"hierarchy ({h.n_levels} levels): {sizes}")
+
+    cfg = PSCConfig(k=4, p_target=1.4, newton_iters=15, tcg_iters=12,
+                    kmeans_restarts=4, seed=0)
+
+    t0 = time.time()
+    res_ml = p_spectral_cluster(
+        W, dataclasses.replace(cfg, multilevel=MultilevelConfig()))
+    t_ml = time.time() - t0
+
+    t0 = time.time()
+    res_flat = p_spectral_cluster(W, cfg)
+    t_flat = time.time() - t0
+
+    print(f"{'solver':<10} {'RCut':>10} {'wall':>8}")
+    print(f"{'flat':<10} {res_flat.rcut:10.5f} {t_flat:7.1f}s")
+    print(f"{'V-cycle':<10} {res_ml.rcut:10.5f} {t_ml:7.1f}s")
+    print(f"speedup: {t_flat / t_ml:.2f}x, "
+          f"RCut gap: {(res_ml.rcut - res_flat.rcut) / res_flat.rcut * 100:+.2f}%")
+    n_ref = len(res_ml.levels or [])
+    print(f"per-level refinements recorded: {n_ref} "
+          f"(levels {sorted({r['level'] for r in res_ml.levels})})")
+    assert res_ml.rcut <= res_flat.rcut * 1.02, "V-cycle lost >2% quality"
+    print("OK: hierarchical solve matches flat quality at a fraction of "
+          "the cost")
+
+
+if __name__ == "__main__":
+    main()

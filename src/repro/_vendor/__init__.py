@@ -1,0 +1,1 @@
+"""Vendored zero-dependency fallbacks for optional dev dependencies."""

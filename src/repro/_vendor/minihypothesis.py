@@ -1,0 +1,145 @@
+"""A minimal, zero-dependency stand-in for the slice of the hypothesis
+API the property suites use (``given`` / ``settings`` /
+``strategies.floats|integers|sampled_from``).
+
+The pinned local image does not ship ``hypothesis`` (and nothing may be
+pip-installed into it), but the algebraic property suite should gate
+locally, not only in CI.  When the real library is importable the test
+modules use it — this module is the ``except ImportError`` branch only.
+
+Semantics: deterministic seeded random search.  Each ``@given`` test
+runs ``max_examples`` times (default 20, override via ``@settings``)
+with draws from a PCG64 stream seeded by the test's qualified name, so
+a failure reproduces exactly on re-run.  Boundary values are emitted
+first (min/max/zero for numeric strategies, every element in turn for
+``sampled_from``) — the cheap half of hypothesis' shrinking heuristic;
+there is no shrinking proper and no example database.
+"""
+from __future__ import annotations
+
+
+import hashlib
+from typing import Any, List, Sequence
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies", "HealthCheck"]
+
+
+class HealthCheck:
+    """Placeholder namespace: suppress_health_check lists accept these."""
+
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+class _Strategy:
+    """One value source: fixed boundary examples first, then random."""
+
+    def __init__(self, boundary: Sequence[Any], draw):
+        self._boundary = list(boundary)
+        self._draw = draw
+
+    def example_at(self, i: int, rng: np.random.Generator):
+        if i < len(self._boundary):
+            return self._boundary[i]
+        return self._draw(rng)
+
+
+class _Strategies:
+    @staticmethod
+    def floats(min_value=None, max_value=None, allow_nan=False,
+               allow_infinity=False, width=64) -> _Strategy:
+        lo = -1e9 if min_value is None else float(min_value)
+        hi = 1e9 if max_value is None else float(max_value)
+        if width == 32:
+            lo, hi = float(np.float32(lo)), float(np.float32(hi))
+        mid = 0.0 if lo <= 0.0 <= hi else 0.5 * (lo + hi)
+        cast = (lambda x: float(np.float32(x))) if width == 32 else float
+
+        def draw(rng):
+            return cast(rng.uniform(lo, hi))
+
+        return _Strategy([lo, hi, mid], draw)
+
+    @staticmethod
+    def integers(min_value=0, max_value=2 ** 31 - 1) -> _Strategy:
+        lo, hi = int(min_value), int(max_value)
+
+        def draw(rng):
+            return int(rng.integers(lo, hi + 1))
+
+        return _Strategy([lo, hi], draw)
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        elements = list(elements)
+
+        def draw(rng):
+            # rng-driven, NOT a shared cycle: several sampled_from
+            # strategies in one @given must explore the cross product,
+            # not only index-aligned (diagonal) combinations
+            return elements[int(rng.integers(len(elements)))]
+
+        # boundary pass = each element once, then random combinations
+        return _Strategy(elements, draw)
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy([False, True], lambda rng: bool(rng.integers(0, 2)))
+
+
+strategies = _Strategies()
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    """Decorator: override the runner's example budget.  ``deadline`` and
+    unknown kwargs are accepted and ignored (per-example timing is a
+    hypothesis feature this stand-in does not replicate)."""
+
+    def deco(fn):
+        fn._mh_max_examples = int(max_examples)
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    """Decorator: run the test once per drawn example.
+
+    Keyword strategies only (the style the repo's suites use).  The
+    random stream is seeded from the test's qualified name, so runs are
+    reproducible; the failing example's kwargs are attached to the
+    raised AssertionError's message.
+    """
+
+    def deco(fn):
+        # a zero-arg runner: pytest must not see the strategy parameters
+        # in the signature (it would resolve them as fixtures), so no
+        # functools.wraps — name/doc copied by hand
+        def runner():
+            n = getattr(runner, "_mh_max_examples", 20)
+            seed = int.from_bytes(
+                hashlib.sha256(fn.__qualname__.encode()).digest()[:8],
+                "little")
+            rng = np.random.default_rng(seed)
+            names: List[str] = sorted(strats)
+            for i in range(n):
+                drawn = {k: strats[k].example_at(i, rng) for k in names}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"{fn.__qualname__} failed on example {i}: "
+                        f"{drawn!r}") from e
+
+        # NOTE: deliberately no ``runner.hypothesis`` attribute — pytest
+        # special-cases that name and would look for ``.inner_test``
+        runner.__name__ = fn.__name__
+        runner.__qualname__ = fn.__qualname__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        runner._mh_max_examples = 20
+        return runner
+
+    return deco

@@ -70,6 +70,12 @@ class PSCConfig:
     # "none" | "rcm" | "degree" (graphs.reorder).  Transparent: labels
     # and eigenvectors are un-permuted before PSCResult is returned.
     reorder: str = "none"
+    # multilevel V-cycle routing (repro.multilevel, DESIGN.md §6):
+    # None/False = flat solve; True = default MultilevelConfig; or a
+    # MultilevelConfig instance.  Coarsen with heavy-edge matching, run
+    # the continuation on the coarsest graph, prolong + refine back up;
+    # labels/U/metrics are returned on THIS graph either way.
+    multilevel: object = None
 
     def descriptor(self) -> Descriptor:
         return Descriptor(backend=self.backend, interpret=self.interpret)
@@ -104,6 +110,9 @@ class PSCResult:
     hvp_counts: list                # Hessian-apply count per level
     init_labels: Optional[np.ndarray] = None  # p=2 (Spec) labels
     init_rcut: float = float("nan")
+    # multilevel runs only: per-level refinement records (level id, n,
+    # nnz, p, fval, n_hvp) appended as the V-cycle walks up
+    levels: Optional[list] = None
 
 
 # --- memoized jitted Newton minimization (one trace per execution
@@ -190,8 +199,27 @@ def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig) -> RTRResult:
     return fn(W, U0, jnp.asarray(p, U0.dtype))
 
 
+def p_schedule(cfg: PSCConfig) -> list:
+    """The continuation schedule p_t = max(p_target, 2.0 * factor^t),
+    t >= 1 — shared by the flat loop below and the nested multilevel
+    schedule (repro.multilevel.vcycle)."""
+    ps, p = [], 2.0
+    while True:
+        p = max(cfg.p_target, p * cfg.p_factor)
+        ps.append(p)
+        if p <= cfg.p_target:
+            return ps
+
+
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     """Run the full GrB-pGrass pipeline on graph W."""
+    if cfg.multilevel:
+        from repro.multilevel.vcycle import (MultilevelConfig,
+                                             multilevel_cluster)
+
+        ml = (cfg.multilevel if isinstance(cfg.multilevel, MultilevelConfig)
+              else MultilevelConfig())
+        return multilevel_cluster(W, cfg, ml)
     inv = None
     if cfg.reorder != "none":
         from repro.graphs.reorder import reorder as _reorder
@@ -214,16 +242,12 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
 
     # -- stage 2: p-continuation on the Grassmann manifold
     p_path, fvals, hvps = [], [], []
-    p = 2.0
-    while True:
-        p = max(cfg.p_target, p * cfg.p_factor)
+    for p in p_schedule(cfg):
         res = _minimize_at_p(W, U, p, cfg)
         U = res.U
         p_path.append(p)
         fvals.append(float(res.fval))
         hvps.append(int(res.n_hvp))
-        if p <= cfg.p_target:
-            break
 
     # -- stage 3: kmeans discretization of the nonlinear eigenvectors
     key, sub = jax.random.split(key)

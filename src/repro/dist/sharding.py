@@ -224,6 +224,29 @@ def named_sharding(shape, logical, mesh,
     return NamedSharding(mesh, resolve_spec(shape, logical, mesh, rules))
 
 
+def factored_moment_specs(shape: Sequence[int],
+                          logical: Sequence[Optional[str]], mesh,
+                          rules: Optional[AxisRules] = None
+                          ) -> Tuple[P, P]:
+    """(row, col) PartitionSpecs for Adafactor's factored second moments
+    of a parameter with ``(shape, logical)``: row drops the last axis,
+    col drops the second-to-last (train/optimizer.py's FactoredMoment).
+
+    Each moment is re-resolved through ``resolve_spec`` on its OWN
+    (shape, logical) — NOT sliced out of the parameter's resolved
+    PartitionSpec.  Slicing under-shards: dropping a dim frees the mesh
+    axis it consumed, so a remaining dim whose candidate lost the greedy
+    race on the full parameter (e.g. ("heads", "mlp") both wanting
+    "model") can shard in the moment; divisibility is also re-checked
+    against the moment's extents, not the parameter's."""
+    assert len(shape) == len(logical), (shape, logical)
+    row = resolve_spec(tuple(shape[:-1]), tuple(logical[:-1]), mesh, rules)
+    col = resolve_spec(tuple(shape[:-2]) + tuple(shape[-1:]),
+                       tuple(logical[:-2]) + tuple(logical[-1:]),
+                       mesh, rules)
+    return row, col
+
+
 def constrain(x, mesh, logical: Sequence[Optional[str]],
               rules: Optional[AxisRules] = None):
     """with_sharding_constraint under the logical-axis naming; identity

@@ -1,11 +1,13 @@
 from repro.graphs.generators import (
-    delaunay_graph, grid_graph, ring_of_cliques, sbm_graph, gaussian_blobs_knn,
+    delaunay_graph, grid_graph, ring_of_cliques, sbm_graph,
+    sbm_graph_sparse, gaussian_blobs_knn,
 )
-from repro.graphs.mmio import read_matrix_market
+from repro.graphs.mmio import read_matrix_market, write_matrix_market
 
 __all__ = [
     "delaunay_graph", "grid_graph", "ring_of_cliques", "sbm_graph",
-    "gaussian_blobs_knn", "read_matrix_market",
+    "sbm_graph_sparse", "gaussian_blobs_knn",
+    "read_matrix_market", "write_matrix_market",
 ]
 from repro.graphs.partition import partition, cut_edges
 

@@ -98,7 +98,9 @@ def ring_of_cliques(n_cliques: int, clique_size: int, bridge_w: float = 0.1,
 
 def sbm_graph(sizes, p_in: float, p_out: float, seed: int = 0,
               **kw) -> Tuple[SparseMatrix, np.ndarray]:
-    """Stochastic block model with blocks `sizes`."""
+    """Stochastic block model with blocks `sizes` (dense Bernoulli over
+    all O(n²) pairs — exact, but only viable for small n; use
+    ``sbm_graph_sparse`` for the ≥100k-node bench/scaling regime)."""
     rng = np.random.default_rng(seed)
     n = int(sum(sizes))
     truth = np.repeat(np.arange(len(sizes)), sizes)
@@ -106,6 +108,57 @@ def sbm_graph(sizes, p_in: float, p_out: float, seed: int = 0,
     prob = np.where(truth[r] == truth[c], p_in, p_out)
     keep = rng.random(len(r)) < prob
     return _to_matrix(r[keep], c[keep], np.ones(keep.sum()), n, **kw), truth
+
+
+def sbm_graph_sparse(sizes, deg_in: float, deg_out: float, seed: int = 0,
+                     w_in: float = 1.0, w_out: float = 1.0,
+                     **kw) -> Tuple[SparseMatrix, np.ndarray]:
+    """Sparse-regime stochastic block model, O(nnz) construction.
+
+    Parameterized by expected degrees instead of probabilities (the
+    natural units when n grows): each vertex gets ~``deg_in`` expected
+    neighbours inside its block and ~``deg_out`` outside.  Edge counts
+    per block pair are Poisson-sampled, endpoints uniform within the
+    blocks, duplicates/self-loops dropped by ``_symmetrize`` — never
+    touches the O(n²) pair grid, so 500k+-node planted partitions build
+    in seconds (the multilevel bench regime, DESIGN.md §6).
+
+    ``w_in`` / ``w_out`` weight intra- vs cross-block edges (the
+    weighted planted partition, e.g. similarity graphs).  Note for
+    w_in == w_out in the sparse unit-weight regime the blocks are
+    locally invisible — no triangles, equal degrees — which is exactly
+    the setting where *any* locality-based coarsening loses the planted
+    structure while global eigenvectors keep it.
+    """
+    rng = np.random.default_rng(seed)
+    sizes = np.asarray(sizes, np.int64)
+    k = len(sizes)
+    n = int(sizes.sum())
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    truth = np.repeat(np.arange(k), sizes)
+    rows_l, cols_l, vals_l = [], [], []
+    for a in range(k):
+        for b in range(a, k):
+            if a == b:
+                mean = 0.5 * deg_in * sizes[a]
+            else:
+                # per-vertex deg_out spread over the other blocks in
+                # proportion to their size (undirected: count each
+                # unordered pair once)
+                mean = deg_out * sizes[a] * sizes[b] / max(n, 1)
+            m = int(rng.poisson(mean))
+            if m == 0:
+                continue
+            rows_l.append(offs[a] + rng.integers(0, sizes[a], m))
+            cols_l.append(offs[b] + rng.integers(0, sizes[b], m))
+            vals_l.append(np.full(m, w_in if a == b else w_out))
+    if not rows_l:
+        return _to_matrix(np.zeros(0, np.int64), np.zeros(0, np.int64),
+                          np.zeros(0), n, **kw), truth
+    rows = np.concatenate(rows_l)
+    cols = np.concatenate(cols_l)
+    vals = np.concatenate(vals_l)
+    return _to_matrix(rows, cols, vals, n, **kw), truth
 
 
 def gaussian_blobs_knn(n_per: int, k_blobs: int, knn: int = 10,

@@ -9,25 +9,48 @@ naive-vs-partitioned projection).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+import dataclasses
+from typing import Optional, Tuple, Union
 
 import numpy as np
 
 from repro.grblas.containers import SparseMatrix
 from repro.core import PSCConfig, p_spectral_cluster, metrics
 
+# device-placement partitioning is setup-time work on graphs that can be
+# huge (the 8M-node regime): above this size the multilevel V-cycle
+# (repro.multilevel) replaces the flat solve under multilevel="auto"
+MULTILEVEL_AUTO_THRESHOLD = 20_000
+
 
 def partition(W: SparseMatrix, n_parts: int, p_target: float = 1.4,
               seed: int = 0, balance: bool = True,
-              cfg: Optional[PSCConfig] = None) -> Tuple[np.ndarray, dict]:
+              cfg: Optional[PSCConfig] = None,
+              multilevel: Union[bool, str] = "auto"
+              ) -> Tuple[np.ndarray, dict]:
     """Balanced min-RCut partition of graph W into n_parts.
 
     Returns (assignment (n,), info) where info carries the cut metrics
     and the per-part sizes.  ``balance=True`` rebalances overfull parts
     by moving their lowest-margin nodes (greedy, keeps near-equal sizes
-    as required for device placement)."""
-    cfg = cfg or PSCConfig(k=n_parts, p_target=p_target, seed=seed,
-                           newton_iters=15, tcg_iters=10, kmeans_restarts=4)
+    as required for device placement).
+
+    ``multilevel``: True forces the V-cycle fast path, False forces the
+    flat solve, "auto" (default) picks the V-cycle once the graph
+    crosses MULTILEVEL_AUTO_THRESHOLD vertices — big graphs stop paying
+    full-graph solve cost just to be placed on devices.  An explicit
+    ``cfg`` wins: its own ``multilevel`` field is left untouched.
+    """
+    if cfg is None:
+        cfg = PSCConfig(k=n_parts, p_target=p_target, seed=seed,
+                        newton_iters=15, tcg_iters=10, kmeans_restarts=4)
+        use_ml = (multilevel is True
+                  or (multilevel == "auto"
+                      and W.n_rows >= MULTILEVEL_AUTO_THRESHOLD))
+        if use_ml:
+            from repro.multilevel import MultilevelConfig
+
+            cfg = dataclasses.replace(cfg, multilevel=MultilevelConfig())
     res = p_spectral_cluster(W, cfg)
     labels = np.asarray(res.labels).copy()
 

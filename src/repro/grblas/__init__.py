@@ -39,7 +39,7 @@ from repro.grblas.api import (
 )
 from repro.grblas.backends import register_backend, registered_backends
 from repro.grblas.ops import e_wise_apply, apply, reduce as grb_reduce
-from repro.grblas.dist import dist_mxm, make_row_partition, shard_mxm
+from repro.grblas.dist import make_row_partition, shard_mxm
 
 __all__ = [
     "Semiring", "EdgeSemiring", "PairEdgeSemiring", "reals_ring",
@@ -51,5 +51,5 @@ __all__ = [
     "mxm", "mxv", "vxm", "available_backends",
     "register_backend", "registered_backends",
     "e_wise_apply", "apply", "grb_reduce",
-    "dist_mxm", "make_row_partition", "shard_mxm",
+    "make_row_partition", "shard_mxm",
 ]

@@ -11,7 +11,7 @@ The ``Descriptor`` replaces the old scatter of ``use_ell`` /
 kernels.bsr_spmm.bsr_spmm, kernels.plap_edge.plap_apply, dist.dist_mxm):
 
     backend    "auto" | "coo" | "ell" | "sellcs" | "bsr_pallas" |
-               "edge_pallas" | "dist"
+               "edge_pallas" | "dist" | "spgemm"
     transpose  operate on A^T (COO index-role swap; vxm flips this)
     interpret  run Pallas kernels in interpreter mode (CPU numerics pin)
     mesh/axis  device mesh + axis name for the "dist" backend
@@ -31,6 +31,10 @@ p-Laplacian apply); a ``PairEdgeSemiring`` sees two multivectors —
 pass ``X=(U, Eta)`` — which is the matrix-free Newton HVP.  The Alg-1
 materialized path reuses the same API via
 ``A.with_vals(what_vals)`` (per-column multivalues on A's pattern).
+A SparseMatrix multiplicand makes mxm GraphBLAS' general sparse-sparse
+product ("spgemm" backend, reals ring): the result is a new
+SparseMatrix — the multilevel subsystem's Galerkin triple product
+Pᵀ (W P) is two such calls (DESIGN.md §6).
 
 Write semantics (GraphBLAS C⟨M⟩ ⊙= T, simplified to pure outputs):
 ``accum=(op, C)`` returns op(C, T); ``mask`` (row mask or full-shape)
@@ -71,12 +75,25 @@ DEFAULT_DESCRIPTOR = Descriptor()
 
 
 def mxm(A, X, ring=reals_ring, *, mask=None, accum=None,
-        desc: Optional[Descriptor] = None) -> jnp.ndarray:
+        desc: Optional[Descriptor] = None):
     """Sparse x dense multivector (SpMM) under ``ring``.
 
-    X: (n,) or (n, k) — or a pair (U, Eta) for a PairEdgeSemiring.
+    X: (n,) or (n, k) — or a pair (U, Eta) for a PairEdgeSemiring — or a
+    SparseMatrix, in which case this is GraphBLAS' general sparse-sparse
+    mxm (the "spgemm" backend) and the product comes back as a new
+    SparseMatrix (host-side construction; the multilevel Galerkin triple
+    product Pᵀ (W P) is two such calls).
     """
     desc = DEFAULT_DESCRIPTOR if desc is None else desc
+    from repro.grblas.containers import SparseMatrix
+    if isinstance(X, SparseMatrix):             # sparse product (spgemm)
+        if mask is not None or accum is not None:
+            # reject BEFORE dispatch: the SpGEMM is O(flops) host work
+            raise NotImplementedError(
+                "mask/accum write semantics are defined for dense outputs; "
+                "the sparse-sparse product returns a SparseMatrix")
+        be = _backends.select_backend(A, X, ring, desc)
+        return be.execute(A, X, ring, desc)
     be = _backends.select_backend(A, X, ring, desc)
     Y = be.execute(A, X, ring, desc)
     return _finalize(Y, ring, mask, accum)

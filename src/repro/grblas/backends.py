@@ -19,6 +19,15 @@ Registered backends (priority: lower = preferred under "auto"):
                                multivals) + plap edge kinds
   ell          padded ELL      rings with a padded reducer  20   20
   coo          COO (always)    any ring, transpose, multivals 30 30
+  spgemm       COO (always)    reals, X a SparseMatrix      25   25
+
+"spgemm" is the sparse × *sparse* member of the table — GraphBLAS' mxm
+proper: ``api.mxm(A, B)`` with B a SparseMatrix returns the product as
+a new SparseMatrix.  It is the only backend claiming a sparse
+multiplicand, so its priority never competes; the multilevel subsystem
+builds Galerkin coarse operators (Pᵀ W P) through it (DESIGN.md §6).
+The result pattern is data-dependent, so execution is host-side (like
+every layout build) and traced containers are rejected loudly.
 
 "sellcs" sits above full-ELL in the auto order but *defers* to ELL when
 the matrix's ELL fill ratio is under SELLCS_AUTO_THRESHOLD — on low-skew
@@ -140,6 +149,10 @@ def _is_pair(X) -> bool:
     return isinstance(X, (tuple, list))
 
 
+def _is_sparse(X) -> bool:
+    return isinstance(X, SparseMatrix)
+
+
 def _broadcast_vals(vals, ndim):
     """Lift (nnz,) values to (nnz, 1) against an (n, k) multivector;
     (nnz, k) multivalues (containers.with_vals) pass through."""
@@ -155,7 +168,7 @@ def _square(A) -> bool:
 # --------------------------------------------------------------- coo backend
 
 def _coo_supports(A, X, ring, desc):
-    if not isinstance(A, SparseMatrix):
+    if not isinstance(A, SparseMatrix) or _is_sparse(X):
         return False
     if isinstance(ring, PairEdgeSemiring):
         return (_is_pair(X) and len(X) == 2 and _square(A)
@@ -207,7 +220,7 @@ def _ell_supports(A, X, ring, desc):
             and A.vals.ndim == 1
             and isinstance(ring, Semiring)
             and not isinstance(ring, (EdgeSemiring, PairEdgeSemiring))
-            and not _is_pair(X)
+            and not _is_pair(X) and not _is_sparse(X)
             and not desc.transpose
             and fast_paths(ring).padded is not None)
 
@@ -450,7 +463,7 @@ def _edge_pallas_execute(A, X, ring, desc):
 # -------------------------------------------------------------- dist backend
 
 def _dist_supports(A, X, ring, desc):
-    if desc.mesh is None or desc.transpose or _is_pair(X):
+    if desc.mesh is None or desc.transpose or _is_pair(X) or _is_sparse(X):
         return False
     from repro.grblas.dist import RowPartitionedMatrix
 
@@ -506,3 +519,70 @@ def _dist_execute(A, X, ring, desc):
             cache[n_shards] = make_row_partition(A, n_shards)
         Ap = cache[n_shards]
     return shard_mxm(Ap, X, desc.mesh, axis=desc.axis, ring=ring)
+
+
+# ------------------------------------------------------------ spgemm backend
+
+def _spgemm_supports(A, X, ring, desc):
+    """Sparse × sparse under the reals (+,×) ring.  The output pattern is
+    data-dependent, so this is a host-side construction op (like every
+    layout build), not a jittable kernel — traced containers are caught
+    in execute with an actionable error rather than silently excluded
+    here, so a named backend="spgemm" fails loudly."""
+    return (isinstance(A, SparseMatrix) and _is_sparse(X)
+            and isinstance(ring, Semiring)
+            and not isinstance(ring, (EdgeSemiring, PairEdgeSemiring))
+            and ring.name == "reals_+x")
+
+
+@register_backend("spgemm", cpu_priority=25, tpu_priority=25,
+                  supports=_spgemm_supports)
+def _spgemm_execute(A, B, ring, desc):
+    """C = A (*) B (or Aᵀ B under desc.transpose), both sparse, under the
+    reals ring — GraphBLAS' general mxm.  Row-expansion SpGEMM: every
+    stored A entry (i, j) fans out over B's row j, then duplicate (i, b)
+    pairs fold under the add monoid.  O(flops) host work; for the
+    partition-of-unity prolongators of the multilevel subsystem (one
+    entry per row/column) it degenerates to a linear-time relabel+fold.
+    The product comes back as a bare-COO SparseMatrix — derived layouts
+    are a consumer decision (a chained triple product should not pay
+    ELL/SELL builds on its intermediate): callers that keep the result
+    rebuild layouts with ``from_coo`` (multilevel.coarsen does)."""
+    import numpy as np
+
+    for arr in (A.rows, A.cols, A.vals, B.rows, B.cols, B.vals):
+        if isinstance(arr, jax.core.Tracer):
+            raise BackendUnavailableError(
+                "spgemm cannot multiply traced SparseMatrix operands (the "
+                "output pattern is data-dependent): run it outside jit — "
+                "hierarchy construction is host-side setup, not hot-loop "
+                "work")
+    a_rows = np.asarray(A.cols if desc.transpose else A.rows, np.int64)
+    a_cols = np.asarray(A.rows if desc.transpose else A.cols, np.int64)
+    a_vals = np.asarray(A.vals)
+    n_out = A.n_cols if desc.transpose else A.n_rows
+    b_rows = np.asarray(B.rows, np.int64)
+    b_cols = np.asarray(B.cols, np.int64)
+    b_vals = np.asarray(B.vals)
+
+    # CSR-style row pointers of B (from_coo guarantees row-sorted COO)
+    counts = np.bincount(b_rows, minlength=B.n_rows)
+    indptr = np.concatenate([[0], np.cumsum(counts)])
+    reps = counts[a_cols]                       # fan-out of each A entry
+    total = int(reps.sum())
+    out_rows = np.repeat(a_rows, reps)
+    av = np.repeat(a_vals, reps)
+    offs = np.arange(total, dtype=np.int64) - np.repeat(
+        np.cumsum(reps) - reps, reps)
+    bpos = np.repeat(indptr[a_cols], reps) + offs
+    out_cols = b_cols[bpos]
+    prod = av * b_vals[bpos]
+
+    # fold duplicates under the add monoid (+)
+    key = out_rows * B.n_cols + out_cols
+    uniq, inv = np.unique(key, return_inverse=True)
+    vals = np.bincount(inv, weights=prod)
+    dtype = A.vals.dtype
+    return SparseMatrix.from_coo(uniq // B.n_cols, uniq % B.n_cols, vals,
+                                 (n_out, B.n_cols), dtype=dtype,
+                                 build_ell=False, build_sellcs=False)

@@ -71,24 +71,6 @@ def make_row_partition(A: SparseMatrix, n_shards: int,
         n_rows=n, n_cols=A.n_cols, n_shards=n_shards, perm=perm)
 
 
-def dist_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
-             axis: str = "data", ring: Semiring | EdgeSemiring = reals_ring,
-             p: float = 2.0, eps: float = 1e-9) -> jnp.ndarray:
-    """Deprecated shim — the sharded layout is now reachable through the
-    unified API: ``api.mxm(Ap_or_W, X, ring,
-    desc=Descriptor(backend="dist", mesh=mesh, axis=axis))`` (a plain
-    SparseMatrix is row-partitioned once and memoized)."""
-    import warnings
-
-    from repro.grblas import api
-    warnings.warn(
-        "repro.grblas.dist.dist_mxm is deprecated; use grblas.api.mxm with "
-        "Descriptor(backend='dist', mesh=..., axis=...) — DESIGN.md §3",
-        DeprecationWarning, stacklevel=2)
-    return api.mxm(Ap, X, ring,
-                   desc=api.Descriptor(backend="dist", mesh=mesh, axis=axis))
-
-
 def shard_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
               axis: str = "data",
               ring: Semiring | EdgeSemiring = reals_ring) -> jnp.ndarray:

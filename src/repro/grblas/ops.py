@@ -1,65 +1,28 @@
-"""Algebraic operators: eWiseApply / apply / reduce + deprecated shims.
+"""Algebraic operators: eWiseApply / apply / reduce.
 
-The SpMM family (mxm / mxv / vxm) moved to the unified execution API in
-``repro.grblas.api`` — one ``mxm(A, X, ring, *, mask, accum, desc)``
-signature whose ``Descriptor`` selects the backend (coo / ell /
-bsr_pallas / edge_pallas / dist) from the registry in
-``repro.grblas.backends``.  The flag-style entry points below
-(``use_ell=...``) are kept as thin deprecated shims for one release;
-see DESIGN.md §3 for the migration table.
+The SpMM family (mxm / mxv / vxm) lives in the unified execution API
+(``repro.grblas.api``) — one ``mxm(A, X, ring, *, mask, accum, desc)``
+signature whose ``Descriptor`` selects the backend from the registry in
+``repro.grblas.backends``.  The flag-style entry points that used to
+live here (``ops.mxm(use_ell=...)`` etc.) were deprecated for one
+release and are now deleted; DESIGN.md §3 keeps the migration table.
 
 Still current here: the dense elementwise ops (e_wise_apply, apply) and
-``reduce``, which now folds under the ring's registered dense fast path
-(semiring.register_ring_fast_paths) instead of a name-keyed if-chain,
-with a correct generic scan-fold for unregistered monoids.
+``reduce``, which folds under the ring's registered dense fast path
+(semiring.register_ring_fast_paths) with a correct generic scan-fold
+for unregistered monoids.
 """
 from __future__ import annotations
 
-import warnings
 from functools import partial
-from typing import Callable, Union
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 
 from repro.grblas import api
 from repro.grblas.containers import SparseMatrix
-from repro.grblas.semiring import (Semiring, EdgeSemiring, fast_paths,
-                                   reals_ring)
-
-
-def _deprecated(old: str, new: str):
-    warnings.warn(
-        f"repro.grblas.{old} is deprecated; use {new} "
-        f"(see DESIGN.md §3 migration notes)",
-        DeprecationWarning, stacklevel=3)
-
-
-def mxm(A: SparseMatrix, X: jnp.ndarray,
-        ring: Union[Semiring, EdgeSemiring] = reals_ring,
-        use_ell: bool = True) -> jnp.ndarray:
-    """Deprecated shim — use grblas.api.mxm(A, X, ring, desc=Descriptor())."""
-    _deprecated("ops.mxm(use_ell=...)", "grblas.api.mxm(..., desc=...)")
-    desc = api.Descriptor(backend="auto" if use_ell else "coo")
-    return api.mxm(A, X, ring, desc=desc)
-
-
-def mxv(A: SparseMatrix, x: jnp.ndarray, ring=reals_ring) -> jnp.ndarray:
-    """Deprecated shim — use grblas.api.mxv."""
-    _deprecated("ops.mxv", "grblas.api.mxv")
-    return api.mxv(A, x, ring)
-
-
-def vxm(x: jnp.ndarray, A: SparseMatrix, ring=reals_ring) -> jnp.ndarray:
-    """Deprecated shim — use grblas.api.vxm.
-
-    (The old in-place implementation crashed on 2-D multivectors with an
-    edge ring — ``x.ndim == 2 and A.vals[:, None] or A.vals`` is a truth-
-    value-ambiguous boolean on arrays; the api COO backend broadcasts
-    values properly, regression-tested in tests/test_grblas_api.py.)
-    """
-    _deprecated("ops.vxm", "grblas.api.vxm")
-    return api.vxm(x, A, ring)
+from repro.grblas.semiring import Semiring, fast_paths, reals_ring
 
 
 def e_wise_apply(a: jnp.ndarray, b: jnp.ndarray, op: Callable) -> jnp.ndarray:

@@ -1,13 +1,17 @@
 """Pallas TPU kernels for the framework's compute hot spots.
 
-Each kernel package has: <name>.py (pl.pallas_call + BlockSpec),
-ops.py (jit'd dispatching wrapper) and ref.py (pure-jnp oracle).
-All kernels are validated in interpret=True mode against their oracle
-over shape/dtype sweeps in tests/test_kernels_*.py.
+Each kernel package has: <name>.py (pl.pallas_call + BlockSpec) and
+ref.py (pure-jnp oracle); kernels that are not grblas backends
+(kmeans_assign, flash_attention) also keep an ops.py dispatching
+wrapper.  The grblas-served kernels (bsr_spmm, plap_edge, sellcs_spmm)
+are reached through ``grblas.api.mxm`` + Descriptor — their deprecated
+ops.py wrappers are deleted (DESIGN.md §3).  All kernels are validated
+in interpret=True mode against their oracle over shape/dtype sweeps in
+tests/test_kernels_*.py.
 """
-from repro.kernels.bsr_spmm import bsr_spmm, bsr_spmm_ref
+from repro.kernels.bsr_spmm import bsr_spmm_pallas, bsr_spmm_ref
 from repro.kernels.plap_edge import (
-    plap_apply, plap_hvp_edge, plap_apply_ref, plap_hvp_edge_ref)
+    plap_apply_pallas, plap_hvp_pallas, plap_apply_ref, plap_hvp_edge_ref)
 from repro.kernels.sellcs_spmm import (
     sellcs_spmm_pallas, sellcs_spmm_ref,
     sellcs_plap_apply_pallas, sellcs_plap_apply_ref,
@@ -16,7 +20,8 @@ from repro.kernels.kmeans_assign import kmeans_assign, kmeans_assign_ref
 from repro.kernels.flash_attention import flash_attention, attention_ref
 
 __all__ = [
-    "bsr_spmm", "bsr_spmm_ref", "plap_apply", "plap_hvp_edge",
+    "bsr_spmm_pallas", "bsr_spmm_ref",
+    "plap_apply_pallas", "plap_hvp_pallas",
     "plap_apply_ref", "plap_hvp_edge_ref",
     "sellcs_spmm_pallas", "sellcs_spmm_ref",
     "sellcs_plap_apply_pallas", "sellcs_plap_apply_ref",

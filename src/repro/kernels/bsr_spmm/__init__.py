@@ -1,10 +1,12 @@
-# Import the impl module FIRST: the first import of the submodule
-# `repro.kernels.bsr_spmm.bsr_spmm` sets the package attribute
-# ``bsr_spmm`` to the module object.  Doing it eagerly here means the
-# function binding below wins, and later lazy imports of the submodule
-# (grblas.backends) hit the sys.modules cache without re-clobbering.
-import repro.kernels.bsr_spmm.bsr_spmm  # noqa: F401
-from repro.kernels.bsr_spmm.ops import bsr_spmm
+"""BSR SpMM Pallas kernel package.
+
+The public entry point is the unified API: ``grblas.api.mxm(A, X,
+desc=Descriptor(backend="bsr_pallas", interpret=...))`` (auto-selected
+on TPU).  The one-release deprecated wrapper ``ops.bsr_spmm`` is gone;
+DESIGN.md §3 keeps the migration table.  This package only exposes the
+raw kernel + reference for the backend registry and the kernel tests.
+"""
+from repro.kernels.bsr_spmm.bsr_spmm import bsr_spmm_pallas
 from repro.kernels.bsr_spmm.ref import bsr_spmm_ref
 
-__all__ = ["bsr_spmm", "bsr_spmm_ref"]
+__all__ = ["bsr_spmm_pallas", "bsr_spmm_ref"]

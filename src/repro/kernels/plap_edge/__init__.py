@@ -1,4 +1,16 @@
-from repro.kernels.plap_edge.ops import plap_apply, plap_hvp_edge
+"""Fused p-Laplacian edge-semiring Pallas kernels.
+
+The public entry point is the unified API:
+
+    api.mxm(A, X, plap_edge_semiring(p, eps), desc=Descriptor(...))
+    api.mxm(A, (U, Eta), plap_hvp_edge_semiring(p, eps), desc=...)
+
+(the "edge_pallas" backend, auto-selected on TPU when the BSR layout is
+built).  The one-release deprecated wrappers ``ops.plap_apply`` /
+``ops.plap_hvp_edge`` are gone; DESIGN.md §3 keeps the migration table.
+"""
+from repro.kernels.plap_edge.plap_edge import plap_apply_pallas, plap_hvp_pallas
 from repro.kernels.plap_edge.ref import plap_apply_ref, plap_hvp_edge_ref
 
-__all__ = ["plap_apply", "plap_hvp_edge", "plap_apply_ref", "plap_hvp_edge_ref"]
+__all__ = ["plap_apply_pallas", "plap_hvp_pallas",
+           "plap_apply_ref", "plap_hvp_edge_ref"]

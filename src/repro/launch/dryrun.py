@@ -35,7 +35,7 @@ from repro.models import layers as L
 from repro.models.config import ArchConfig
 from repro.train.loop import TrainConfig, make_train_step, make_optimizer
 from repro.train.optimizer import AdamState, AdafactorState, FactoredMoment
-from repro.dist.sharding import resolve_spec
+from repro.dist.sharding import factored_moment_specs, resolve_spec
 
 
 # ----------------------------------------------------------- shardings
@@ -49,22 +49,26 @@ def batch_shardings(cfg, mesh, specs):
 
 
 def opt_state_shardings(opt_name, cfg, mesh):
-    """Optimizer-state shardings mirroring the param PartitionSpecs."""
+    """Optimizer-state shardings mirroring the param PartitionSpecs.
+
+    Adafactor's factored moments are re-resolved from the *abstract*
+    params' (shape, logical) through dist.sharding.factored_moment_specs
+    — not sliced out of the param specs, which under-shards (see its
+    docstring; unit-tested in tests/test_dist_sharding.py)."""
     ab = M.abstract_params(cfg)
-    pspecs = L.pspec_tree(ab, mesh)                  # tree of PartitionSpec
     ns = lambda spec: NamedSharding(mesh, spec)
     rep = NamedSharding(mesh, P())
     if opt_name == "adamw":
-        t = jax.tree.map(ns, pspecs)
+        t = jax.tree.map(ns, L.pspec_tree(ab, mesh))
         return AdamState(mu=t, nu=t, count=rep)
-    # adafactor: row drops the last axis's partition, col the 2nd-to-last
-    def fact(spec):
-        parts = tuple(spec)
-        if len(parts) >= 2:
-            return FactoredMoment(row=ns(P(*parts[:-1])),
-                                  col=ns(P(*(parts[:-2] + parts[-1:]))))
-        return ns(spec)
-    return AdafactorState(moments=jax.tree.map(fact, pspecs), count=rep)
+
+    def fact(a):
+        if len(a.shape) >= 2:
+            row, col = factored_moment_specs(a.shape, a.logical, mesh)
+            return FactoredMoment(row=ns(row), col=ns(col))
+        return ns(resolve_spec(a.shape, a.logical, mesh))
+    moments = jax.tree.map(fact, ab, is_leaf=L.is_pab)
+    return AdafactorState(moments=moments, count=rep)
 
 
 def opt_state_shapes(opt, cfg):

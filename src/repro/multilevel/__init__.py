@@ -1,0 +1,33 @@
+"""Multilevel coarsening + hierarchical p-spectral solve (DESIGN.md §6).
+
+The flat solver touches the full graph every Newton iteration, so
+wall-clock grows linearly in nnz no matter how fast the SpMM kernels
+get.  This subsystem makes the paper's 8M-node regime tractable on one
+host the way the multigrid/p-spectral literature does (Pasadakis et
+al.; Hein & Bühler): coarsen the graph with heavy-edge matching, run
+the expensive small-p continuation on the coarsest graph, then prolong
+the eigenvectors level-by-level with a few cheap refinement Newton
+steps per level.
+
+Coarsening is itself a GraphBLAS computation — the Galerkin coarse
+operator is the triple product Pᵀ W P, two ``grblas.api.mxm`` calls
+through the spgemm backend — so every coarse graph inherits the full
+layout/backend machinery (SELL-C-σ auto-build, descriptor dispatch)
+for free.
+"""
+from repro.multilevel.coarsen import (
+    CoarsenInfo,
+    Hierarchy,
+    Level,
+    build_hierarchy,
+    coarsen_graph,
+    heavy_edge_matching,
+    prolongator_from_aggregates,
+)
+from repro.multilevel.vcycle import MultilevelConfig, multilevel_cluster
+
+__all__ = [
+    "CoarsenInfo", "Hierarchy", "Level", "build_hierarchy", "coarsen_graph",
+    "heavy_edge_matching", "prolongator_from_aggregates",
+    "MultilevelConfig", "multilevel_cluster",
+]

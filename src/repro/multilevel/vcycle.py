@@ -1,0 +1,167 @@
+"""Hierarchical p-spectral solve: coarsest-level continuation + prolong
+/ re-orthonormalize / refine up the hierarchy (DESIGN.md §6).
+
+The flat solver's cost profile is (LOBPCG p=2 init) + (full Newton
+continuation), both O(nnz) per iteration on the *fine* graph.  The
+V-cycle moves both to the coarsest graph:
+
+  1. run the complete flat pipeline (p=2 eigenvectors + the whole
+     p-continuation down to p_target) on the coarsest level — the
+     expensive small-p trust-region steps cost O(nnz_coarsest);
+  2. walking back up, prolong U through the partition-of-unity
+     prolongator (one ``api.mxm``), re-orthonormalize with thin QR (the
+     Grassmann retraction of the prolonged subspace), and run a *few*
+     refinement Newton steps — the tail of the p schedule, nested so
+     each finer level only re-runs the last ``refine_p_steps`` p values
+     it inherited already-converged iterates for;
+  3. discretize + score on the finest graph exactly like the flat
+     solver (labels, U, RCut/NCut all live on the caller's graph).
+
+Entry point: ``PSCConfig(multilevel=MultilevelConfig(...))`` — routing
+lives in ``core.psc.p_spectral_cluster``; this module never needs to be
+imported directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.grblas import api
+from repro.grblas.containers import SparseMatrix
+from repro.multilevel.coarsen import build_hierarchy
+
+
+@dataclasses.dataclass(frozen=True)
+class MultilevelConfig:
+    """V-cycle shape: hierarchy caps + per-level refinement budget."""
+
+    coarse_size: int = 2048         # stop coarsening at this many vertices
+    max_levels: int = 12            # hierarchy depth cap (incl. finest)
+    min_reduction: float = 0.9      # stagnation guard: stop when a step
+                                    # keeps > this fraction of vertices
+    match_rounds: int = 8           # handshake-HEM rounds per level
+    match_max_agg: int = 4          # leaf-joining aggregate size cap
+                                    # (coarsen.heavy_edge_matching)
+    refine_newton_iters: int = 5    # RTR iterations per refined level
+    refine_tcg_iters: int = 8       # inner tCG budget during refinement
+    refine_p_steps: int = 2         # tail of the p schedule re-run per
+                                    # refined level (1 = p_target only;
+                                    # 2+ eases the prolonged iterate
+                                    # back in through the last
+                                    # continuation steps — measurably
+                                    # closes the RCut gap to flat on
+                                    # noisy graphs)
+    refine_top_frac: float = 0.25   # refine only levels with
+                                    # n ≥ frac × n_finest (the finest
+                                    # level always qualifies).  Deep
+                                    # levels cost almost nothing to
+                                    # refine in FLOPs but each pays a
+                                    # full jit trace+compile for its
+                                    # shapes — measured, the compile tax
+                                    # dwarfed their compute; prolonging
+                                    # straight through them loses no
+                                    # measurable quality once the top
+                                    # levels re-run the p tail
+    sparsify: Any = "auto"          # coarse-level degree cap ("auto" |
+                                    # None | int): volume-preserving
+                                    # diagonal lumping that keeps
+                                    # nnz_ℓ ∝ n_ℓ on expander-like
+                                    # graphs that densify under
+                                    # contraction (coarsen.py)
+
+
+def _layout_kwargs(cfg) -> Optional[dict]:
+    """Coarse graphs must carry whatever layout the pinned backend
+    needs; "auto" relies on the from_coo auto policy (PR-3)."""
+    if cfg.backend == "sellcs":
+        return {"build_sellcs": True}
+    if cfg.backend in ("bsr_pallas", "edge_pallas"):
+        return {"build_bsr": True}
+    if cfg.backend in ("ell", "dist"):
+        return {"build_ell": True}
+    return None
+
+
+def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
+                       ) -> "Any":
+    """Run the V-cycle under flat-config ``cfg`` (a PSCConfig whose
+    ``multilevel`` field routed here).  Returns a PSCResult on the fine
+    graph — same fields, same metrics, plus per-level refinement
+    records in ``result.levels``."""
+    from repro.core import kmeans as km, metrics
+    from repro.core import psc as _psc
+
+    hier = build_hierarchy(W, coarse_size=ml.coarse_size,
+                           max_levels=ml.max_levels,
+                           min_reduction=ml.min_reduction,
+                           rounds=ml.match_rounds,
+                           layout_kwargs=_layout_kwargs(cfg),
+                           sparsify=ml.sparsify,
+                           max_agg=ml.match_max_agg)
+    flat_cfg = dataclasses.replace(cfg, multilevel=None)
+    if hier.n_levels == 1:          # nothing to coarsen: flat solve
+        return _psc.p_spectral_cluster(W, flat_cfg)
+
+    # -- coarsest level: the whole flat pipeline (p=2 LOBPCG init + full
+    # p-continuation).  Its labels seed init_labels on the fine graph.
+    res_c = _psc.p_spectral_cluster(hier.coarsest.W, flat_cfg)
+    U = res_c.U
+    p_path = list(res_c.p_path)
+    fvals = list(res_c.fvals)
+    hvps = list(res_c.hvp_counts)
+    level_records: List[dict] = []
+
+    schedule = _psc.p_schedule(cfg)
+    tail = schedule[-max(int(ml.refine_p_steps), 1):]
+    refine_cfg = dataclasses.replace(
+        cfg, multilevel=None, newton_iters=ml.refine_newton_iters,
+        tcg_iters=ml.refine_tcg_iters, reorder="none")
+
+    # -- walk up: prolong -> (on the top levels) re-orthonormalize +
+    # refine.  Deep levels are prolonged straight through: their
+    # refinement FLOPs are negligible but each distinct level shape pays
+    # a full jit trace+compile — the measured tax dwarfed the compute.
+    n_fine = W.n_rows
+    for lev in range(hier.n_levels - 2, -1, -1):
+        P = hier.prolongators[lev]
+        Wl = hier.levels[lev].W
+        U = api.mxm(P, U)                       # prolong: (n_lev, k)
+        if Wl.n_rows < ml.refine_top_frac * n_fine:
+            continue
+        refine_cfg.validate_backend(Wl)
+        U = jnp.linalg.qr(U)[0]                 # Grassmann retraction
+        for p in tail:
+            res = _psc._minimize_at_p(Wl, U, p, refine_cfg)
+            U = res.U
+            p_path.append(p)
+            fvals.append(float(res.fval))
+            hvps.append(int(res.n_hvp))
+            level_records.append({
+                "level": lev, "n_levels": hier.n_levels,
+                "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
+                "fval": float(res.fval), "n_hvp": int(res.n_hvp),
+                "iters": int(res.iters)})
+    U = jnp.linalg.qr(U)[0]
+
+    # -- finest-level discretization + metrics (identical to the flat
+    # solver's stage 3: metrics unchanged, permutation-free)
+    key = jax.random.PRNGKey(cfg.seed)
+    _, sub = jax.random.split(key)
+    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
+    labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
+                          iters=cfg.kmeans_iters)
+    rcut = float(metrics.rcut(W, labels, cfg.k))
+    ncut = float(metrics.ncut(W, labels, cfg.k))
+
+    init_labels = hier.prolong_labels(np.asarray(res_c.labels))
+    init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
+
+    return _psc.PSCResult(
+        labels=np.asarray(labels), U=U, rcut=rcut, ncut=ncut,
+        p_path=p_path, fvals=fvals, hvp_counts=hvps,
+        init_labels=init_labels, init_rcut=init_rcut,
+        levels=level_records)

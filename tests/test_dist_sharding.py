@@ -90,6 +90,67 @@ def test_logical_to_mesh_ignores_shape():
     assert out == ("data", "model", None)
 
 
+# ------------------------------------------- factored optimizer moments
+
+def test_factored_moment_specs_reresolve_not_slice():
+    """Dropping a dim frees its mesh axis: the col moment of a
+    ("heads", "mlp") param — both logical names candidate for "model",
+    heads wins on the full param — must shard over "model" once heads
+    is gone.  Hand-slicing the param's PartitionSpec (the old
+    launch/dryrun.py::opt_state_shardings) replicated it."""
+    from repro.dist.sharding import factored_moment_specs
+
+    mesh = single_pod()
+    full = resolve_spec((32, 16384), ("heads", "mlp"), mesh, DEFAULT_RULES)
+    assert full == P("model")                  # mlp lost the greedy race
+    row, col = factored_moment_specs((32, 16384), ("heads", "mlp"), mesh,
+                                     DEFAULT_RULES)
+    assert row == P("model")                   # (32,) heads keeps model
+    assert col == P("model")                   # (16384,) mlp now gets it
+    # hand-slicing operated on the trimmed param spec (trailing Nones
+    # dropped, so entries don't even align with dims): parts[:-1] here
+    # replicated the row moment the param itself shards
+    assert P(*tuple(full)[:-1]) == P()
+
+
+def test_factored_moment_specs_divisibility_rechecked():
+    """Divisibility is checked against the MOMENT's extents: a (48, 6)
+    ("mlp", "kv") param replicates kv (6 % 16 != 0); the row moment
+    (48,) still shards over model because 48 divides 16."""
+    from repro.dist.sharding import factored_moment_specs
+
+    mesh = single_pod()
+    row, col = factored_moment_specs((48, 6), ("mlp", "kv"), mesh,
+                                     DEFAULT_RULES)
+    assert row == P("model") and col == P()
+
+
+def test_opt_state_shardings_use_factored_specs():
+    """dryrun.opt_state_shardings derives adafactor moments through
+    factored_moment_specs (ROADMAP AxisRules follow-up): every moment's
+    spec equals a fresh resolve on its own (shape, logical)."""
+    from repro.dist.sharding import factored_moment_specs
+    from repro.launch import dryrun
+    from repro.models import model as M
+    from repro.models.layers import is_pab
+    from repro.configs import get_config
+
+    cfg = get_config("gemma-2b")
+    mesh = jax.make_mesh((1,), ("model",))
+    state = dryrun.opt_state_shardings("adafactor", cfg, mesh)
+    ab_leaves = jax.tree.leaves(M.abstract_params(cfg), is_leaf=is_pab)
+    mo_leaves = jax.tree.leaves(
+        state.moments,
+        is_leaf=lambda x: type(x).__name__ == "FactoredMoment")
+    assert len(ab_leaves) == len(mo_leaves) > 0
+    for a, m in zip(ab_leaves, mo_leaves):
+        if len(a.shape) >= 2:
+            row, col = factored_moment_specs(a.shape, a.logical, mesh)
+            assert m.row.spec == row and m.col.spec == col
+        else:
+            assert m.spec == resolve_spec(a.shape, a.logical, mesh)
+
+
 # --------------------------------------------------- active rules registry
 
 def test_rules_for_thresholds():

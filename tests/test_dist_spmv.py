@@ -16,7 +16,7 @@ SCRIPT = textwrap.dedent("""
     import numpy as np
     import jax, jax.numpy as jnp
     from repro.graphs import delaunay_graph
-    from repro.grblas import mxm, make_row_partition, dist_mxm
+    from repro.grblas import Descriptor, mxm, make_row_partition
     from repro.grblas.semiring import plap_edge_semiring
 
     W, _ = delaunay_graph(9, seed=0)
@@ -24,33 +24,28 @@ SCRIPT = textwrap.dedent("""
     Ap = make_row_partition(W, 8)
     rng = np.random.default_rng(0)
     X = jnp.asarray(rng.standard_normal((W.n_rows, 3)), jnp.float32)
+    d = Descriptor(backend="dist", mesh=mesh)
 
-    # reals ring
+    # reals ring, pre-built partition through the unified API
     want = np.asarray(mxm(W, X))
-    got = np.asarray(dist_mxm(Ap, X, mesh))
+    got = np.asarray(mxm(Ap, X, desc=d))
     np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
 
     # graph-aware placement permutation preserves the product
     labels = (np.arange(W.n_rows) * 7) % 4
     Ap2 = make_row_partition(W, 8, assignment=labels)
     Xp = X[Ap2.perm]
-    got2 = np.asarray(dist_mxm(Ap2, Xp, mesh))
+    got2 = np.asarray(mxm(Ap2, Xp, desc=d))
     want2 = np.asarray(mxm(W, X))[Ap2.perm]
     np.testing.assert_allclose(got2, want2, rtol=2e-5, atol=2e-5)
 
     # edge semiring (p-Laplacian apply), distributed
     ring = plap_edge_semiring(1.5, eps=1e-8)
     want3 = np.asarray(mxm(W, X, ring))
-    got3 = np.asarray(dist_mxm(Ap, X, mesh, ring=ring))
+    got3 = np.asarray(mxm(Ap, X, ring, desc=d))
     np.testing.assert_allclose(got3, want3, rtol=2e-4, atol=2e-5)
 
-    # unified API: the sharded layout is one Descriptor away — both from
-    # a pre-built partition and from the raw SparseMatrix (auto-partition
-    # + memoization on the container)
-    from repro.grblas import Descriptor
-    d = Descriptor(backend="dist", mesh=mesh)
-    got4 = np.asarray(mxm(Ap, X, desc=d))
-    np.testing.assert_allclose(got4, want, rtol=2e-5, atol=2e-5)
+    # a raw SparseMatrix auto-partitions + memoizes on the container
     got5 = np.asarray(mxm(W, X, desc=d))
     np.testing.assert_allclose(got5, want, rtol=2e-5, atol=2e-5)
     assert 8 in W._dist_partitions          # partition memoized

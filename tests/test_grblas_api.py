@@ -111,12 +111,6 @@ def test_vxm_edge_semiring_multivector_regression():
             d = xd[j, col] - xd[:, col]
             want[j, col] = np.sum(Wd[:, j] * np.abs(d) ** (p - 1) * np.sign(d))
     np.testing.assert_allclose(np.asarray(got), want, rtol=1e-8, atol=1e-10)
-    # deprecated shim reaches the same fixed path
-    from repro.grblas import ops as grb
-    with pytest.deprecated_call():
-        got_shim = grb.vxm(X, M, ring)
-    np.testing.assert_allclose(np.asarray(got_shim), want,
-                               rtol=1e-8, atol=1e-10)
 
 
 def test_vxm_is_transposed_mxm():
@@ -228,36 +222,63 @@ def test_with_vals_multivalues_spmm():
         mxv(M.with_vals(what), jnp.ones(M.n_rows))
 
 
-def test_deprecated_shims_delegate():
-    from repro.grblas import ops as grb
-    from repro.kernels.bsr_spmm import bsr_spmm
-    from repro.kernels.plap_edge import plap_apply, plap_hvp_edge
+def test_spgemm_sparse_sparse_mxm():
+    """GraphBLAS' general mxm: a SparseMatrix multiplicand dispatches to
+    the spgemm backend and the product is a SparseMatrix."""
+    rng = np.random.RandomState(11)
+    A = sp.random(24, 30, density=0.15, random_state=rng)
+    B = sp.random(30, 18, density=0.2, random_state=rng)
+    Ma = SparseMatrix.from_scipy(A, dtype=jnp.float64)
+    Mb = SparseMatrix.from_scipy(B, dtype=jnp.float64)
+    assert available_backends(Ma, Mb) == ["spgemm"]
+    C = mxm(Ma, Mb)
+    assert isinstance(C, SparseMatrix)
+    np.testing.assert_allclose(np.asarray(C.to_dense()), (A @ B).toarray(),
+                               rtol=1e-10, atol=1e-12)
+    # transpose descriptor: Aᵀ B
+    B2 = sp.random(24, 9, density=0.2, random_state=rng)
+    Mb2 = SparseMatrix.from_scipy(B2, dtype=jnp.float64)
+    Ct = mxm(Ma, Mb2, desc=Descriptor(backend="spgemm", transpose=True))
+    np.testing.assert_allclose(np.asarray(Ct.to_dense()),
+                               (A.T @ B2).toarray(), rtol=1e-10, atol=1e-12)
 
-    _, M = _sym(dtype=jnp.float32)
-    X = jnp.asarray(np.random.default_rng(0).standard_normal(
-        (M.n_rows, 2)), jnp.float32)
-    with pytest.deprecated_call():
-        a = grb.mxm(M, X)
-    np.testing.assert_allclose(np.asarray(a), np.asarray(mxm(M, X)),
-                               rtol=1e-6)
-    with pytest.deprecated_call():
-        b = bsr_spmm(M, X, interpret=True)
-    np.testing.assert_allclose(
-        np.asarray(b),
-        np.asarray(mxm(M, X, desc=Descriptor(backend="bsr_pallas",
-                                             interpret=True))), rtol=1e-6)
-    with pytest.deprecated_call():
-        c = plap_apply(M, X, p=1.5, eps=1e-6, use_pallas=False)
-    want = mxm(M, X, plap_edge_semiring(1.5, 1e-6),
-               desc=Descriptor(backend="coo"))
-    np.testing.assert_allclose(np.asarray(c), np.asarray(want),
-                               rtol=2e-4, atol=2e-5)
-    with pytest.deprecated_call():
-        d = plap_hvp_edge(M, X, X, p=1.5, eps=1e-6, interpret=True)
-    want = mxm(M, (X, X), plap_hvp_edge_semiring(1.5, 1e-6),
-               desc=Descriptor(backend="coo"))
-    np.testing.assert_allclose(np.asarray(d), np.asarray(want),
-                               rtol=2e-4, atol=2e-5)
+
+def test_spgemm_rejects_nonreals_and_write_semantics():
+    rng = np.random.RandomState(12)
+    Ma = SparseMatrix.from_scipy(sp.random(10, 10, density=0.3,
+                                           random_state=rng))
+    Mb = SparseMatrix.from_scipy(sp.random(10, 10, density=0.3,
+                                           random_state=rng))
+    with pytest.raises(BackendUnavailableError):
+        mxm(Ma, Mb, min_plus_ring)
+    with pytest.raises(NotImplementedError):
+        mxm(Ma, Mb, mask=np.ones(10, bool))
+    # dense backends never claim a sparse multiplicand
+    names = available_backends(Ma, Mb)
+    assert names == ["spgemm"]
+
+
+def test_deprecated_shims_deleted():
+    """The one-release migration window (DESIGN.md §3) is over: the old
+    flag-style entry points must be gone, so stale callers fail loudly
+    at import instead of silently warning forever."""
+    import repro.grblas.ops as grb_ops
+    import repro.grblas.dist as grb_dist
+    import repro.kernels.bsr_spmm as kb
+    import repro.kernels.plap_edge as kp
+
+    for mod, name in ((grb_ops, "mxm"), (grb_ops, "mxv"), (grb_ops, "vxm"),
+                      (grb_dist, "dist_mxm"),
+                      (kp, "plap_apply"), (kp, "plap_hvp_edge")):
+        assert not callable(getattr(mod, name, None)), \
+            f"{mod.__name__}.{name} should be deleted"
+    # the bsr_spmm package attribute is the impl *module* now, never the
+    # deleted shim function
+    assert not callable(getattr(kb, "bsr_spmm", None)) or \
+        getattr(kb, "bsr_spmm").__class__.__name__ == "module"
+    # the replacements exist
+    from repro.grblas.api import mxm as api_mxm  # noqa: F401
+    assert callable(kb.bsr_spmm_pallas) and callable(kp.plap_apply_pallas)
 
 
 def test_psc_backend_validated_up_front():

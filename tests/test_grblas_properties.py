@@ -1,11 +1,17 @@
-"""Hypothesis property tests for the algebraic layer + system invariants."""
+"""Hypothesis property tests for the algebraic layer + system invariants.
+
+Runs under the real ``hypothesis`` when installed (CI); the pinned
+local image falls back to the vendored minimal generator
+(repro._vendor.minihypothesis — same decorator surface, deterministic
+seeded search) so the algebraic property suite gates locally too."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="hypothesis not in the pinned CI image")
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro._vendor.minihypothesis import given, settings, strategies as st
 
 from repro.grblas import (SparseMatrix, mxv, reals_ring, min_plus_ring,
                           boolean_ring, max_times_ring)

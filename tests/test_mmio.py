@@ -1,0 +1,87 @@
+"""MatrixMarket I/O: chunked streaming parse, pattern/symmetric header
+handling, committed fixtures, and write/read round-trips."""
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.graphs import (gaussian_blobs_knn, read_matrix_market,
+                          ring_of_cliques, write_matrix_market)
+
+DATA = Path(__file__).resolve().parent / "data"
+
+
+def test_committed_weighted_gz_fixture():
+    """ring3x4.mtx.gz: general real, gzipped — regenerable from
+    ring_of_cliques(3, 4, bridge_w=0.25)."""
+    R = read_matrix_market(DATA / "ring3x4.mtx.gz")
+    W, _ = ring_of_cliques(3, 4, bridge_w=0.25)
+    assert (R.n_rows, R.n_cols, R.nnz) == (W.n_rows, W.n_cols, W.nnz)
+    np.testing.assert_allclose(np.asarray(R.to_dense()),
+                               np.asarray(W.to_dense()))
+
+
+def test_committed_pattern_symmetric_fixture():
+    """cycle6.mtx: coordinate *pattern symmetric* — no value column,
+    lower triangle stored, mirrored on load with unit weights."""
+    P = read_matrix_market(DATA / "cycle6.mtx")
+    d = np.asarray(P.to_dense())
+    assert P.nnz == 14                       # 7 stored entries mirrored
+    np.testing.assert_array_equal(d, d.T)
+    assert set(np.unique(d).tolist()) == {0.0, 1.0}
+    assert (d.diagonal() == 0).all()
+
+
+def test_chunked_parse_equals_slurp():
+    """Any chunk size must yield the identical matrix (the streaming
+    parse is a pure memory optimization)."""
+    base = read_matrix_market(DATA / "ring3x4.mtx.gz")
+    for chunk in (1, 2, 5, 1000):
+        R = read_matrix_market(DATA / "ring3x4.mtx.gz", chunk=chunk)
+        assert R.nnz == base.nnz
+        np.testing.assert_allclose(np.asarray(R.to_dense()),
+                                   np.asarray(base.to_dense()))
+
+
+def test_round_trip_weighted(tmp_path):
+    W, _ = gaussian_blobs_knn(12, 3, knn=4, seed=0)
+    for name in ("w.mtx", "w.mtx.gz"):
+        p = tmp_path / name
+        write_matrix_market(p, W)
+        R = read_matrix_market(p, chunk=17)
+        assert (R.n_rows, R.n_cols, R.nnz) == (W.n_rows, W.n_cols, W.nnz)
+        np.testing.assert_allclose(np.asarray(R.to_dense()),
+                                   np.asarray(W.to_dense()), rtol=1e-12)
+
+
+def test_round_trip_pattern(tmp_path):
+    W, _ = ring_of_cliques(3, 5)
+    p = tmp_path / "p.mtx"
+    write_matrix_market(p, W, pattern=True, comment="pattern round trip")
+    R = read_matrix_market(p, chunk=3)
+    assert R.nnz == W.nnz
+    np.testing.assert_allclose(
+        np.asarray(R.to_dense()),
+        (np.asarray(W.to_dense()) != 0).astype(np.float64))
+
+
+def test_truncated_file_raises(tmp_path):
+    p = tmp_path / "t.mtx"
+    p.write_text("%%MatrixMarket matrix coordinate real general\n"
+                 "4 4 3\n1 2 1.0\n2 3 2.0\n")   # header claims 3 entries
+    with pytest.raises(ValueError, match="truncated"):
+        read_matrix_market(p, chunk=2)
+
+
+def test_non_mm_header_raises(tmp_path):
+    p = tmp_path / "x.mtx"
+    p.write_text("4 4 0\n")
+    with pytest.raises(ValueError, match="MatrixMarket"):
+        read_matrix_market(p)
+
+
+def test_layout_kwargs_passthrough():
+    R = read_matrix_market(DATA / "ring3x4.mtx.gz", build_sellcs=True,
+                           sell_c=4)
+    assert R.sell_cols is not None and R.sell_c == 4

@@ -1,0 +1,283 @@
+"""Multilevel subsystem: hierarchy invariants, Galerkin-via-mxm purity,
+and V-cycle end-to-end quality (DESIGN.md §6).
+
+The hierarchy invariants pinned here are the contract the V-cycle
+relies on:
+  * partition of unity — every fine vertex sits in exactly one
+    aggregate with weight 1;
+  * volume preservation — Galerkin with self-loops kept preserves
+    weighted degrees exactly, level to level, so NCut volumes are
+    consistent at every level;
+  * fine-level label consistency — labels prolonged from any level are
+    constant on aggregates.
+"""
+import dataclasses
+from pathlib import Path
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from repro._vendor.minihypothesis import given, settings, strategies as st
+
+from repro.grblas import SparseMatrix, api
+from repro.grblas.api import Descriptor
+from repro.core import PSCConfig, p_spectral_cluster, metrics
+from repro.graphs import delaunay_graph, ring_of_cliques, sbm_graph
+from repro.multilevel import (MultilevelConfig, build_hierarchy,
+                              coarsen_graph, heavy_edge_matching,
+                              prolongator_from_aggregates)
+
+_T = Descriptor(transpose=True)
+
+
+def _rand_sym(n, density, seed, weighted=True):
+    import scipy.sparse as sp
+    A = sp.random(n, n, density=density,
+                  random_state=np.random.RandomState(seed))
+    A = A + A.T
+    A.setdiag(0)
+    A.eliminate_zeros()
+    if not weighted:
+        A.data[:] = 1.0
+    return SparseMatrix.from_scipy(A, dtype=jnp.float64)
+
+
+# ----------------------------------------------------------- source purity
+
+def test_no_scipy_or_np_matmul_in_multilevel_sources():
+    """The acceptance contract: coarse operators are built exclusively
+    through grblas.api.mxm — no scipy and no numpy matrix products
+    anywhere in repro/multilevel/."""
+    pkg = Path(__file__).resolve().parent.parent / "src/repro/multilevel"
+    forbidden = ("scipy", "np.matmul", "np.dot", "np.einsum", "jnp.matmul",
+                 "jnp.einsum", ".toarray", "np.tensordot", " @ ")
+    for f in sorted(pkg.glob("*.py")):
+        src = f.read_text()
+        for tok in forbidden:
+            assert tok not in src, f"{f.name} contains forbidden {tok!r}"
+        # the triple product must actually route through the api
+        if f.name == "coarsen.py":
+            assert "api.mxm" in src
+
+
+# ------------------------------------------------------ matching + P shape
+
+def test_heavy_edge_matching_is_valid_aggregation():
+    W = _rand_sym(60, 0.1, seed=0)
+    agg = heavy_edge_matching(W)
+    n_coarse = agg.max() + 1
+    sizes = np.bincount(agg, minlength=n_coarse)
+    # pairs from the handshake + leaf joins, capped at max_agg
+    assert (sizes >= 1).all() and (sizes <= 4).all()
+    assert n_coarse < W.n_rows                         # something contracted
+    # every non-singleton member reached its aggregate through an edge:
+    # some neighbour shares the aggregate id
+    rows, cols = np.asarray(W.rows), np.asarray(W.cols)
+    for i in range(W.n_rows):
+        if sizes[agg[i]] == 1:
+            continue
+        nbrs = cols[rows == i]
+        assert (agg[nbrs] == agg[i]).any(), f"vertex {i} stranded"
+
+
+def test_prolongator_partition_of_unity():
+    W = _rand_sym(50, 0.12, seed=1)
+    agg = heavy_edge_matching(W)
+    P = prolongator_from_aggregates(agg, agg.max() + 1, dtype=jnp.float64)
+    # exactly one stored entry of weight 1 per fine row
+    assert P.nnz == W.n_rows
+    np.testing.assert_array_equal(np.asarray(P.rows), np.arange(W.n_rows))
+    np.testing.assert_allclose(np.asarray(P.vals), 1.0)
+    # P @ 1_c == 1_f through the api itself
+    ones_c = jnp.ones(P.n_cols, jnp.float64)
+    np.testing.assert_allclose(np.asarray(api.mxm(P, ones_c)), 1.0)
+    # column sums == aggregate sizes
+    sizes = np.asarray(api.mxm(P, jnp.ones(P.n_rows, jnp.float64), desc=_T))
+    np.testing.assert_allclose(sizes, np.bincount(agg, minlength=P.n_cols))
+
+
+# ------------------------------------------------------- Galerkin operator
+
+def test_galerkin_matches_dense_oracle():
+    W = _rand_sym(40, 0.15, seed=2)
+    P, Wc, info = coarsen_graph(W)
+    Pd = np.zeros((W.n_rows, info.n_coarse))
+    Pd[np.arange(W.n_rows), info.agg] = 1.0
+    want = Pd.T @ np.asarray(W.to_dense()) @ Pd        # oracle (test-only)
+    np.testing.assert_allclose(np.asarray(Wc.to_dense()), want,
+                               rtol=1e-10, atol=1e-12)
+
+
+def test_volume_preservation_chain():
+    W, _ = delaunay_graph(10, seed=0)
+    h = build_hierarchy(W, coarse_size=64)
+    assert h.n_levels >= 3
+    total = float(jnp.sum(h.levels[0].vol))
+    n_fine = W.n_rows
+    for lev, P in enumerate(h.prolongators):
+        fine, coarse = h.levels[lev], h.levels[lev + 1]
+        # total volume constant level to level
+        np.testing.assert_allclose(float(jnp.sum(coarse.vol)), total,
+                                   rtol=1e-6)
+        # Galerkin with self-loops kept preserves weighted degrees:
+        # W_c.row_sums() == Pᵀ W_f.row_sums()
+        np.testing.assert_allclose(
+            np.asarray(coarse.W.row_sums()),
+            np.asarray(api.mxm(P, fine.W.row_sums(), desc=_T)), rtol=1e-5)
+        # node mass: counts sum to the finest vertex count
+        np.testing.assert_allclose(float(jnp.sum(coarse.counts)), n_fine,
+                                   rtol=1e-6)
+
+
+def test_hierarchy_caps_and_reduction():
+    W, _ = delaunay_graph(10, seed=1)
+    h = build_hierarchy(W, coarse_size=100, max_levels=4)
+    assert h.n_levels <= 4
+    sizes = [l.W.n_rows for l in h.levels]
+    assert all(b < a for a, b in zip(sizes, sizes[1:]))
+    h2 = build_hierarchy(W, coarse_size=100, max_levels=30)
+    assert h2.coarsest.W.n_rows <= 2 * 100   # one matching step ~halves
+
+
+def test_label_consistency_through_prolongation():
+    W, _ = delaunay_graph(9, seed=2)
+    h = build_hierarchy(W, coarse_size=40)
+    rng = np.random.default_rng(0)
+    labels_c = rng.integers(0, 4, h.coarsest.W.n_rows)
+    fine = h.prolong_labels(labels_c)
+    agg = h.aggregate_of_finest(h.n_levels - 1)
+    # constant on aggregates, by construction of the composed map
+    for a in np.unique(agg)[:50]:
+        assert len(set(fine[agg == a].tolist())) == 1
+    np.testing.assert_array_equal(fine, labels_c[agg])
+
+
+def test_sparsify_false_means_off():
+    """sparsify=False must DISABLE sparsification (like multilevel=False
+    elsewhere), not act as cap=0 and delete every off-diagonal edge."""
+    W, _ = delaunay_graph(9, seed=0)
+    h_off = build_hierarchy(W, coarse_size=64, sparsify=False)
+    h_none = build_hierarchy(W, coarse_size=64, sparsify=None)
+    assert [l.W.nnz for l in h_off.levels] == [l.W.nnz for l in h_none.levels]
+    W1 = h_off.levels[1].W
+    rows, cols = np.asarray(W1.rows), np.asarray(W1.cols)
+    assert (rows != cols).sum() > 0          # off-diagonals survived
+    with pytest.raises(ValueError):
+        build_hierarchy(W, coarse_size=64, sparsify=0)
+
+
+def test_sparsify_rowcap_volume_preserving():
+    """The coarse-level degree cap lumps dropped weight onto the
+    diagonal: row sums (volumes) must match the exact Galerkin operator
+    entry for entry, and off-diagonal degrees must be bounded."""
+    W = _rand_sym(80, 0.5, seed=9)          # dense enough for the cap to bite
+    cap = 6
+    P, Wc_exact, info = coarsen_graph(W)
+    P2, Wc_cap, info2 = coarsen_graph(W, sparsify_cap=cap)
+    np.testing.assert_array_equal(info.agg, info2.agg)   # same matching
+    np.testing.assert_allclose(np.asarray(Wc_cap.row_sums()),
+                               np.asarray(Wc_exact.row_sums()),
+                               rtol=1e-10)
+    rows = np.asarray(Wc_cap.rows)
+    cols = np.asarray(Wc_cap.cols)
+    offdeg = np.bincount(rows[rows != cols], minlength=Wc_cap.n_rows)
+    assert offdeg.max() <= 2 * cap           # union keep-rule bound
+    assert Wc_cap.nnz < Wc_exact.nnz         # it actually dropped edges
+    # kept off-diagonal entries are a subset of the exact operator's
+    exact = np.asarray(Wc_exact.to_dense())
+    capd = np.asarray(Wc_cap.to_dense())
+    off = ~np.eye(Wc_cap.n_rows, dtype=bool)
+    mask = (capd != 0) & off
+    np.testing.assert_allclose(capd[mask], exact[mask], rtol=1e-12)
+
+
+# ------------------------------------------------------------- V-cycle e2e
+
+def test_multilevel_recovers_planted_partition():
+    W, truth = sbm_graph([80] * 4, p_in=0.25, p_out=0.01, seed=3)
+    cfg = PSCConfig(k=4, p_target=1.4, newton_iters=10, tcg_iters=8,
+                    kmeans_restarts=4, seed=0,
+                    multilevel=MultilevelConfig(coarse_size=48))
+    res = p_spectral_cluster(W, cfg)
+    assert metrics.clustering_accuracy(res.labels, truth, 4) >= 0.95
+    assert len(res.labels) == W.n_rows          # fine-graph outputs
+    assert res.U.shape == (W.n_rows, 4)
+    G = np.asarray(res.U.T @ res.U)
+    np.testing.assert_allclose(G, np.eye(4), atol=1e-4)
+    assert res.levels, "V-cycle must record per-level refinements"
+    assert res.init_labels is not None and np.isfinite(res.init_rcut)
+    # bookkeeping stays aligned like the flat result's
+    assert len(res.p_path) == len(res.fvals) == len(res.hvp_counts)
+
+
+def test_multilevel_rcut_close_to_flat():
+    W, _ = sbm_graph([70] * 4, p_in=0.3, p_out=0.02, seed=5)
+    flat = PSCConfig(k=4, p_target=1.4, newton_iters=12, tcg_iters=10,
+                     kmeans_restarts=4, seed=0)
+    rf = p_spectral_cluster(W, flat)
+    rm = p_spectral_cluster(W, dataclasses.replace(
+        flat, multilevel=MultilevelConfig(coarse_size=64)))
+    assert rm.rcut <= rf.rcut * 1.1 + 1e-9, (rm.rcut, rf.rcut)
+
+
+def test_multilevel_true_uses_default_config():
+    W, truth = ring_of_cliques(4, 12)
+    cfg = PSCConfig(k=4, p_target=1.5, newton_iters=8, tcg_iters=6,
+                    kmeans_restarts=4, seed=0, multilevel=True)
+    res = p_spectral_cluster(W, cfg)       # graph < coarse_size: flat path
+    assert metrics.clustering_accuracy(res.labels, truth, 4) == 1.0
+
+
+def test_partition_multilevel_fast_path():
+    from repro.graphs import partition as graph_partition
+
+    W, _ = sbm_graph([90, 90], p_in=0.25, p_out=0.02, seed=7)
+    cfg = PSCConfig(k=2, p_target=1.5, newton_iters=8, tcg_iters=6,
+                    kmeans_restarts=4, seed=0,
+                    multilevel=MultilevelConfig(coarse_size=32))
+    labels, info = graph_partition(W, 2, cfg=cfg)
+    sizes = np.bincount(labels, minlength=2)
+    assert abs(int(sizes[0]) - int(sizes[1])) <= 4
+    assert np.isfinite(info["rcut"])
+    # and the multilevel="auto" knob leaves small graphs on the flat path
+    labels2, _ = graph_partition(W, 2, multilevel=False, seed=0)
+    assert len(labels2) == W.n_rows
+
+
+# ----------------------------------------------------- property invariants
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1),
+       weighted=st.sampled_from([True, False]))
+def test_coarsen_invariants_random_graphs(seed, weighted):
+    """Partition of unity + exact Galerkin + volume preservation on
+    arbitrary random symmetric graphs."""
+    W = _rand_sym(36 + seed % 17, 0.18, seed % 9973, weighted=weighted)
+    if W.nnz == 0:
+        return
+    P, Wc, info = coarsen_graph(W)
+    n = W.n_rows
+    assert P.nnz == n
+    np.testing.assert_allclose(np.asarray(api.mxm(
+        P, jnp.ones(info.n_coarse, jnp.float64))), 1.0)
+    Pd = np.zeros((n, info.n_coarse))
+    Pd[np.arange(n), info.agg] = 1.0
+    np.testing.assert_allclose(
+        np.asarray(Wc.to_dense()),
+        Pd.T @ np.asarray(W.to_dense()) @ Pd, rtol=1e-9, atol=1e-11)
+    np.testing.assert_allclose(
+        np.asarray(Wc.row_sums()),
+        np.asarray(api.mxm(P, W.row_sums(), desc=_T)), rtol=1e-9)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_matching_deterministic(seed):
+    W = _rand_sym(40, 0.15, seed % 7919)
+    a1 = heavy_edge_matching(W)
+    a2 = heavy_edge_matching(W)
+    np.testing.assert_array_equal(a1, a2)

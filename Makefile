@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test dryrun-smoke bench-kernels bench-multilevel
+.PHONY: verify imports test test-dist dryrun-smoke bench-kernels \
+	bench-multilevel bench-dist
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -27,3 +28,18 @@ bench-multilevel:
 	$(PY) -c "from pathlib import Path; \
 	import benchmarks.kernels_bench as b; \
 	b.sweep_multilevel(out_path=Path('BENCH_multilevel.json'))"
+
+# Halo-exchange vs all-gather distributed SpMM (shards x k x placement
+# on SBM + delaunay) over a forced 8-device host platform; commits the
+# wire-byte + wall-clock evidence for DESIGN.md §4 to BENCH_dist.json.
+bench-dist:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	JAX_PLATFORMS=cpu $(PY) -c "from pathlib import Path; \
+	import benchmarks.kernels_bench as b; \
+	b.sweep_dist(out_path=Path('BENCH_dist.json'))"
+
+# The dist subprocess suites under a forced 4-device host platform
+# (CI runs this in addition to the default 8-device run inside `test`).
+test-dist:
+	DIST_TEST_DEVICES=4 $(PY) -m pytest -x -q \
+	tests/test_dist_spmv.py tests/test_dist_halo.py

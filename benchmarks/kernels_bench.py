@@ -14,6 +14,11 @@ BENCH_sellcs.json, plus the flat-vs-multilevel V-cycle sweep
 (131k-524k-node graphs, DESIGN.md §6) into BENCH_multilevel.json.
 ``make bench-kernels`` regenerates all three; ``make bench-multilevel``
 reruns just the last (it solves big graphs end to end — the long pole).
+
+The distributed sweep (halo exchange vs all-gather, shards × k ×
+placement, DESIGN.md §4) lives in ``sweep_dist`` and emits
+BENCH_dist.json; it needs a multi-device platform, so it has its own
+entry point: ``make bench-dist`` (forces 8 host devices).
 """
 from __future__ import annotations
 
@@ -151,6 +156,124 @@ def sweep_sellcs(k=4, out_path=None, reps=20):
         entry["best_sellcs"] = best
         entry["speedup_vs_ell"] = round(ell_us / best["wall_us"], 2)
         payload["graphs"].append(entry)
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
+# --------------------------------------------------- distributed SpMM sweep
+
+def sweep_dist(out_path=None, shards=(4, 8), ks=(1, 8, 16, 32), reps=16):
+    """Halo-exchange vs all-gather distributed SpMM (grblas.dist):
+    shards × k × placement on a cluster-aligned SBM and a delaunay
+    triangulation, plus the per-shard SELL-C-σ layout on the same plan.
+
+    Wire bytes are the analytic per-call volumes of the static plans
+    (RowPartitionedMatrix.wire_bytes — the collectives move exactly the
+    planned rows); wall clock is measured over the forced host-device
+    mesh, and every path is pinned against the coo result.  Needs a
+    multi-device platform: ``make bench-dist`` forces 8 host devices.
+    """
+    from repro.compat import make_mesh
+    from repro.graphs import sbm_graph_sparse
+    from repro.grblas import HALO_FALLBACK_FRAC, make_row_partition
+
+    n_dev = len(jax.devices())
+    if n_dev < max(shards):
+        raise RuntimeError(
+            f"sweep_dist needs >= {max(shards)} devices, found {n_dev}: run "
+            "under XLA_FLAGS=--xla_force_host_platform_device_count=8 "
+            "(`make bench-dist`)")
+
+    def _tmed(f, X, reps=reps):
+        """Median-of-reps: the host-device collectives are noisy."""
+        r = f(X)
+        jax.block_until_ready(r)
+        ts = []
+        for _ in range(reps):
+            t0 = time.time()
+            r = f(X)
+            jax.block_until_ready(r)
+            ts.append(time.time() - t0)
+        return float(np.median(ts) * 1e6)
+
+    rng = np.random.default_rng(0)
+    # the communication term dominates when avg degree is small relative
+    # to the shard count (per-shard flops ~ (nnz/S)·k vs gather copy
+    # n·k), so the sweep uses the sparse-degree regime the halo targets
+    Wsbm, truth = sbm_graph_sparse([16384] * 4, deg_in=8.0, deg_out=0.8,
+                                   seed=0, build_ell=True)
+    Wdel, _ = delaunay_graph(15, seed=0)
+    graphs = [
+        # aligned = the planted clusters; delaunay's natural order is
+        # its own locality-aligned placement (contiguous row blocks)
+        ("sbm4_65k", Wsbm, truth),
+        ("delaunay_r15", Wdel, None),
+    ]
+    payload = {"platform": jax.default_backend(), "n_devices": n_dev,
+               "halo_note": "wire bytes analytic per call; self-chunks and "
+                            "own shards excluded on both schedules",
+               "graphs": []}
+    for name, W, aligned in graphs:
+        entry = {"graph": name, "n": W.n_rows, "nnz": W.nnz, "entries": []}
+        for S in shards:
+            mesh = make_mesh((int(S),), ("data",))
+            d = Descriptor(backend="dist", mesh=mesh)
+            ds = Descriptor(backend="dist_sellcs", mesh=mesh)
+            for placement in ("aligned", "shuffled"):
+                asg = aligned if placement == "aligned" else \
+                    rng.permutation(W.n_rows)
+                halo = make_row_partition(W, S, assignment=asg, mode="halo")
+                gath = make_row_partition(W, S, assignment=asg,
+                                          mode="gather")
+                sell = make_row_partition(W, S, assignment=asg, mode="halo",
+                                          sellcs=True)
+                # what mode="auto" would have picked — the build-time
+                # rule of make_row_partition, derived from the forced
+                # halo plan instead of building a fourth partition
+                mode_auto = ("halo" if halo.halo_width
+                             <= HALO_FALLBACK_FRAC * halo.rows_per_shard
+                             else "gather")
+                for k in ks:
+                    shape = (W.n_rows,) if k == 1 else (W.n_rows, k)
+                    X = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+                    ref = np.asarray(mxm(W, X))
+                    us_h = _tmed(jax.jit(lambda u: mxm(halo, u, desc=d)), X)
+                    us_g = _tmed(jax.jit(lambda u: mxm(gath, u, desc=d)), X)
+                    us_s = _tmed(jax.jit(lambda u: mxm(sell, u, desc=ds)), X)
+                    err = max(
+                        float(np.abs(np.asarray(mxm(p, X, desc=dd)) - ref).max())
+                        for p, dd in ((halo, d), (gath, d), (sell, ds)))
+                    wb = halo.wire_bytes(k=k)
+                    entry["entries"].append({
+                        "shards": int(S), "placement": placement, "k": k,
+                        "mode_auto": mode_auto,
+                        "halo_width": wb["halo_width"],
+                        "halo_rows_true": wb["halo_rows_true"],
+                        "wire_bytes_halo": wb["halo"],
+                        "wire_bytes_gather": wb["gather"],
+                        "wire_ratio": round(wb["halo"] / max(wb["gather"], 1),
+                                            3),
+                        "wall_us_halo": round(us_h, 1),
+                        "wall_us_gather": round(us_g, 1),
+                        "wall_us_dist_sellcs": round(us_s, 1),
+                        "wall_speedup_halo_vs_gather": round(us_g / us_h, 2),
+                        "wall_speedup_sellcs_vs_gather": round(us_g / us_s,
+                                                               2),
+                        "max_abs_err_vs_coo": err,
+                    })
+        payload["graphs"].append(entry)
+    # headline: the acceptance configuration (aligned SBM, 4 shards);
+    # both dist flavours ride the same halo plan — sellcs is the faster
+    # execution of it (per-slice padding cuts the fold width too)
+    head = [e for g in payload["graphs"] if g["graph"] == "sbm4_65k"
+            for e in g["entries"]
+            if e["shards"] == 4 and e["placement"] == "aligned"
+            and e["k"] >= 16]
+    payload["headline_sbm4_aligned_4shards"] = [
+        {k: e[k] for k in ("k", "wire_ratio", "wall_speedup_halo_vs_gather",
+                           "wall_speedup_sellcs_vs_gather")}
+        for e in head]
     if out_path is not None:
         Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
     return payload

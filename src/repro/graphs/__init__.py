@@ -9,9 +9,9 @@ __all__ = [
     "sbm_graph_sparse", "gaussian_blobs_knn",
     "read_matrix_market", "write_matrix_market",
 ]
-from repro.graphs.partition import partition, cut_edges
+from repro.graphs.partition import partition, partition_for_mesh, cut_edges
 
-__all__ += ["partition", "cut_edges"]
+__all__ += ["partition", "partition_for_mesh", "cut_edges"]
 from repro.graphs.reorder import (
     reorder, rcm_ordering, degree_ordering, bandwidth,
 )

@@ -86,6 +86,34 @@ def partition(W: SparseMatrix, n_parts: int, p_target: float = 1.4,
 def cut_edges(W: SparseMatrix, labels: np.ndarray) -> int:
     """Number of (directed) nnz crossing the partition — the halo volume
     of the distributed SpMM under this placement."""
-    r = np.asarray(W.rows)
-    c = np.asarray(W.cols)
+    r, c, _ = W.host_coo()
     return int(np.sum(labels[r] != labels[c]))
+
+
+def partition_for_mesh(W: SparseMatrix, n_shards: int, *,
+                       p_target: float = 1.4, seed: int = 0,
+                       cfg: Optional[PSCConfig] = None,
+                       multilevel: Union[bool, str] = "auto",
+                       mode: str = "auto", sellcs: bool = False,
+                       sell_c: int = 32):
+    """Cluster W with its own algorithm, then build the halo-exchange
+    row partition with cluster-aligned placement — the end-to-end
+    graph-aware placement path (DESIGN.md §4).
+
+    Runs :func:`partition` (balanced min-RCut assignment, multilevel
+    fast path on big graphs), hands the assignment to
+    ``grblas.dist.make_row_partition`` so same-cluster rows share a
+    shard, and returns ``(Ap, labels, info)`` where ``info`` adds the
+    resulting halo plan stats (mode, halo width, wire bytes per k=1
+    call) to the cut metrics.  ``mode``/``sellcs``/``sell_c`` pass
+    through to the partition builder.
+    """
+    from repro.grblas.dist import make_row_partition
+
+    labels, info = partition(W, n_shards, p_target=p_target, seed=seed,
+                             cfg=cfg, multilevel=multilevel)
+    Ap = make_row_partition(W, n_shards, assignment=labels, mode=mode,
+                            sellcs=sellcs, sell_c=sell_c)
+    info = dict(info)
+    info["halo"] = {"mode": Ap.mode, **Ap.wire_bytes(k=1)}
+    return Ap, labels, info

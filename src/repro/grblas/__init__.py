@@ -4,16 +4,19 @@ Mirrors the C++ GraphBLAS concepts the paper builds on:
   * algebraic containers  -> SparseMatrix (CSR / padded-ELL / 128x128 BSR), dense jnp vectors
   * algebraic operators   -> the unified execution API (api.mxm / mxv / vxm):
     one SpMM signature whose Descriptor selects the backend — coo, ell,
-    bsr_pallas, edge_pallas, or dist — from the registry in backends.py
+    sellcs, bsr_pallas, edge_pallas, dist, dist_sellcs, or spgemm —
+    from the registry in backends.py
   * algebraic relations   -> Semiring(add, mul, zero, one), the
     edge-semiring extension for the matrix-free p-Laplacian apply, and
     the pair-edge-semiring for the Newton HVP, with per-ring fast-path
     registration (register_ring_fast_paths).
 
 The distributed layer (dist.py) maps the auto-parallelisation role of
-the C++ runtime onto shard_map over a device mesh; it is the "dist"
-backend of the same mxm signature.  See DESIGN.md §3 for the API and
-the migration table from the old per-path entry points.
+the C++ runtime onto shard_map over a device mesh; it is the "dist" /
+"dist_sellcs" backends of the same mxm signature, communicating via a
+precomputed halo exchange (only the remote rows each shard's columns
+touch) instead of a full all-gather.  See DESIGN.md §3 for the API and
+§4 for the halo plan.
 """
 from repro.grblas.semiring import (
     Semiring,
@@ -39,7 +42,14 @@ from repro.grblas.api import (
 )
 from repro.grblas.backends import register_backend, registered_backends
 from repro.grblas.ops import e_wise_apply, apply, reduce as grb_reduce
-from repro.grblas.dist import make_row_partition, shard_mxm
+from repro.grblas.dist import (
+    HALO_FALLBACK_FRAC,
+    RowPartitionedMatrix,
+    device_mesh,
+    init_distributed,
+    make_row_partition,
+    shard_mxm,
+)
 
 __all__ = [
     "Semiring", "EdgeSemiring", "PairEdgeSemiring", "reals_ring",
@@ -51,5 +61,6 @@ __all__ = [
     "mxm", "mxv", "vxm", "available_backends",
     "register_backend", "registered_backends",
     "e_wise_apply", "apply", "grb_reduce",
-    "make_row_partition", "shard_mxm",
+    "HALO_FALLBACK_FRAC", "RowPartitionedMatrix", "device_mesh",
+    "init_distributed", "make_row_partition", "shard_mxm",
 ]

@@ -11,10 +11,11 @@ The ``Descriptor`` replaces the old scatter of ``use_ell`` /
 kernels.bsr_spmm.bsr_spmm, kernels.plap_edge.plap_apply, dist.dist_mxm):
 
     backend    "auto" | "coo" | "ell" | "sellcs" | "bsr_pallas" |
-               "edge_pallas" | "dist" | "spgemm"
+               "edge_pallas" | "dist" | "dist_sellcs" | "spgemm"
     transpose  operate on A^T (COO index-role swap; vxm flips this)
     interpret  run Pallas kernels in interpreter mode (CPU numerics pin)
-    mesh/axis  device mesh + axis name for the "dist" backend
+    mesh/axis  device mesh + axis name for the "dist"/"dist_sellcs"
+               backends (halo-exchange row partition, grblas.dist)
 
 "auto" picks the first capable backend in platform-priority order
 (grblas.backends): Pallas kernels first on TPU, SELL-C-σ/ELL/COO first
@@ -64,8 +65,8 @@ class Descriptor:
     backend: str = "auto"
     transpose: bool = False
     interpret: bool = False
-    mesh: Any = None
-    axis: str = "data"
+    mesh: Any = None            # device mesh: enables the dist backends
+    axis: str = "data"          # mesh axis the rows are sharded over
 
     def transposed(self) -> "Descriptor":
         return dataclasses.replace(self, transpose=not self.transpose)

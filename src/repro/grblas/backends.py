@@ -13,6 +13,8 @@ Registered backends (priority: lower = preferred under "auto"):
 
   name         layout needed   rings                       cpu  tpu
   dist         ELL / row-part  reals, edge (reals base)      0    0  (needs desc.mesh)
+  dist_sellcs  row-part + per- same gates as dist, square    1    1  (needs desc.mesh)
+               shard SELL-C-σ  only
   edge_pallas  BSR tiles       plap_apply / plap_hvp kinds  61   10
   bsr_pallas   BSR tiles       reals                        60   11
   sellcs       SELL-C-σ        padded-reducer rings (incl.  19   12
@@ -478,47 +480,111 @@ def _dist_supports(A, X, ring, desc):
         # sum, so pad entries (val=0) must be annihilated by the edge
         # multiply: guaranteed for the known plap kinds
         # (edge_mul(0, ...) == 0), NOT for generic edge closures — those
-        # must run the coo backend.
-        return (ok_layout and ring.base.name == "reals_+x"
+        # must run the coo backend.  Square-gated like every other
+        # edge-ring backend: the shard body reads x_i from the shard's
+        # own row block, which only aligns when the row and column
+        # spaces (and their paddings) coincide.
+        return (ok_layout and _square(A) and ring.base.name == "reals_+x"
                 and ring.kind == "plap_apply")
     return (ok_layout and isinstance(ring, Semiring)
             and ring.name == "reals_+x")
 
 
+def _dist_partition_for(A, desc, *, sellcs: bool):
+    """Resolve (and memoize) the row partition of a plain SparseMatrix.
+
+    The memo lives on the container instance and is keyed on
+    (shard count, identity of the vals buffer, layout flavour): a caller
+    that swaps the value buffers on the same pattern (the Alg-1 Ŵ
+    update idiom) must not be served a partition carved from the stale
+    ``ell_vals``.  Not pytree state — a matrix that crosses a
+    jit/transform boundary re-partitions on the next call — and not
+    buildable from traced arrays at all: close over the matrix, or
+    pre-build a RowPartitionedMatrix outside the transform.
+    """
+    from repro.grblas.dist import make_row_partition
+
+    if isinstance(A.ell_cols, jax.core.Tracer):
+        raise BackendUnavailableError(
+            "dist backend cannot row-partition a traced SparseMatrix "
+            "(partitioning is host-side numpy): close over the matrix "
+            "instead of passing it as a jit argument, or pre-build a "
+            "RowPartitionedMatrix with make_row_partition outside the "
+            "transform")
+    n_shards = int(desc.mesh.shape[desc.axis])
+    cache = getattr(A, "_dist_partitions", None)
+    if cache is None:
+        cache = {}
+        A._dist_partitions = cache  # host-side memo, not pytree state
+    key = (n_shards, id(A.ell_vals), sellcs)
+    if key not in cache:
+        # a matrix has exactly one live ell_vals buffer, so every entry
+        # pinning a different one is superseded — evict them all (the
+        # Alg-1 Ŵ swap idiom would otherwise accumulate one full
+        # partition per Newton step); entries for other shard counts /
+        # layouts of the CURRENT buffer stay live
+        for stale in [k for k, v in cache.items()
+                      if v[0] is not A.ell_vals]:
+            del cache[stale]
+        # the entry pins the keyed buffer so its id cannot be recycled
+        # by the allocator while the memo is alive
+        cache[key] = (A.ell_vals,
+                      make_row_partition(A, n_shards, sellcs=sellcs))
+    return cache[key][1]
+
+
 @register_backend("dist", cpu_priority=0, tpu_priority=0,
                   supports=_dist_supports)
 def _dist_execute(A, X, ring, desc):
-    """Row-block sharded SpMM over desc.mesh (shard_map + all-gather).
+    """Row-block sharded SpMM over desc.mesh: shard_map + precomputed
+    halo exchange (all_to_all of only the remote rows each shard's
+    columns touch), falling back to the full all-gather when the plan
+    found the halo denser than HALO_FALLBACK_FRAC of the shard size.
 
     Accepts a pre-built RowPartitionedMatrix or a plain SparseMatrix —
-    the partition for (mesh axis size) is built host-side once and
-    memoized on the container *instance*.  Two caveats of that memo: it
-    is not pytree state (a matrix that crosses a jit/transform boundary
-    re-partitions on the next call), and it cannot be built from traced
-    arrays at all — pass the matrix as a closure constant, or pre-build
-    the RowPartitionedMatrix outside the transform.
+    see _dist_partition_for for the partition memo contract.
     """
-    from repro.grblas.dist import RowPartitionedMatrix, make_row_partition, shard_mxm
+    from repro.grblas.dist import RowPartitionedMatrix, shard_mxm
 
     if isinstance(A, RowPartitionedMatrix):
         Ap = A
     else:
-        if isinstance(A.ell_cols, jax.core.Tracer):
-            raise BackendUnavailableError(
-                "dist backend cannot row-partition a traced SparseMatrix "
-                "(partitioning is host-side numpy): close over the matrix "
-                "instead of passing it as a jit argument, or pre-build a "
-                "RowPartitionedMatrix with make_row_partition outside the "
-                "transform")
-        n_shards = int(desc.mesh.shape[desc.axis])
-        cache = getattr(A, "_dist_partitions", None)
-        if cache is None:
-            cache = {}
-            A._dist_partitions = cache  # host-side memo, not pytree state
-        if n_shards not in cache:
-            cache[n_shards] = make_row_partition(A, n_shards)
-        Ap = cache[n_shards]
+        Ap = _dist_partition_for(A, desc, sellcs=False)
     return shard_mxm(Ap, X, desc.mesh, axis=desc.axis, ring=ring)
+
+
+def _dist_sellcs_supports(A, X, ring, desc):
+    """Same ring/pad-soundness gates as "dist" (the shard fold sums a
+    padded axis unconditionally), plus: square only — the per-shard
+    σ-sort shares the halo plan's one-row-space remap — and, for a
+    pre-built partition, the DistSellCS slicing must be present."""
+    if not _dist_supports(A, X, ring, desc):
+        return False
+    from repro.grblas.dist import RowPartitionedMatrix
+
+    if isinstance(A, RowPartitionedMatrix):
+        return A.sell is not None
+    return _square(A)
+
+
+@register_backend("dist_sellcs", cpu_priority=1, tpu_priority=1,
+                  supports=_dist_sellcs_supports)
+def _dist_sellcs_execute(A, X, ring, desc):
+    """Sharded SELL-C-σ SpMM: the halo-exchange schedule of "dist" with
+    each shard running σ-sorted, per-slice-padded width runs over its
+    own row block (slice widths maxed across shards so the shard_map
+    body stays SPMD-uniform) — the skewed-degree layout advantage under
+    a mesh.  A plain SparseMatrix is partitioned with sellcs=True and
+    memoized separately from the full-ELL partition.
+    """
+    from repro.grblas.dist import RowPartitionedMatrix, shard_mxm
+
+    if isinstance(A, RowPartitionedMatrix):
+        Ap = A
+    else:
+        Ap = _dist_partition_for(A, desc, sellcs=True)
+    return shard_mxm(Ap, X, desc.mesh, axis=desc.axis, ring=ring,
+                     layout="sellcs")
 
 
 # ------------------------------------------------------------ spgemm backend

@@ -356,6 +356,18 @@ class SparseMatrix:
             m.sell_vals = tuple(vext[sc] for sc in self.sell_scatter)
         return m
 
+    def host_coo(self):
+        """Host-side (rows, cols, vals) numpy views of the COO triple —
+        the input of every host-side plan builder (row partitioning,
+        halo plans, spgemm, reorderings).  Raises for traced containers,
+        mirroring the backends' loud traced-operand errors."""
+        if isinstance(self.rows, jax.core.Tracer):
+            raise TypeError(
+                "host_coo() needs concrete arrays; this SparseMatrix is "
+                "traced — run host-side plan construction outside jit")
+        return (np.asarray(self.rows), np.asarray(self.cols),
+                np.asarray(self.vals))
+
     def to_dense(self) -> jnp.ndarray:
         d = jnp.zeros((self.n_rows, self.n_cols), self.vals.dtype)
         return d.at[self.rows, self.cols].add(self.vals)

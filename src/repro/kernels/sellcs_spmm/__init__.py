@@ -10,9 +10,12 @@ from repro.kernels.sellcs_spmm.ref import (
     sellcs_spmm_ref,
     sellcs_plap_apply_ref,
     sellcs_plap_hvp_ref,
+    sellcs_shard_spmm_ref,
+    sellcs_shard_plap_apply_ref,
 )
 
 __all__ = [
     "sellcs_spmm_pallas", "sellcs_plap_apply_pallas", "sellcs_plap_hvp_pallas",
     "sellcs_spmm_ref", "sellcs_plap_apply_ref", "sellcs_plap_hvp_ref",
+    "sellcs_shard_spmm_ref", "sellcs_shard_plap_apply_ref",
 ]

@@ -34,3 +34,23 @@ def sellcs_plap_hvp_ref(cols, vals, Up, Ep, row0: int, p: float, eps: float):
     du = Up[row0:row0 + rows][:, None, :] - Up[cols]
     de = Ep[row0:row0 + rows][:, None, :] - Ep[cols]
     return jnp.sum(vals[..., None] * PHI.phi_prime(du, p, eps) * de, axis=1)
+
+
+# --- shard-local variants (the "dist_sellcs" backend, grblas.dist) ---
+# Same per-run gather+fold, but the column ids index a shard's
+# extended-local vector (locals then halo slots) and the own rows are an
+# explicit gather (the σ-sort is per shard, so own rows aren't a
+# contiguous row0 slice of the source vector).
+
+def sellcs_shard_spmm_ref(cols, vals, x_src):
+    """Reals-ring run of one shard: y = sum_w vals * x_src[cols]."""
+    return jnp.sum(vals[..., None] * x_src[cols], axis=1)
+
+
+def sellcs_shard_plap_apply_ref(cols, vals, x_src, x_own, p: float,
+                                eps: float):
+    """p-Laplacian apply run of one shard; x_own: (rows, k) the packed
+    rows' own entries (gathered from the shard-local vector)."""
+    g = x_src[cols]                                # x_j  (rows, w, k)
+    return jnp.sum(vals[..., None] * PHI.phi(x_own[:, None, :] - g, p, eps),
+                   axis=1)

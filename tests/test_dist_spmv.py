@@ -1,59 +1,104 @@
-"""Distributed SpMV (shard_map) == single-device result.
+"""Distributed SpMM (shard_map + halo exchange) == single-device result.
 
-Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
-so the main test process keeps its single-device view.
+Runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=N
+so the main test process keeps its single-device view.  N defaults to 8;
+CI additionally runs the suite with DIST_TEST_DEVICES=4 (the forced
+4-device platform) to prove the plans are shard-count agnostic.
 """
+import os
 import subprocess
 import sys
 import textwrap
 from pathlib import Path
 
 SRC = Path(__file__).resolve().parent.parent / "src"
+N_DEV = os.environ.get("DIST_TEST_DEVICES", "8")
 
 SCRIPT = textwrap.dedent("""
     import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    N = int(os.environ["DIST_TEST_DEVICES"])
+    os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={N}"
     import numpy as np
     import jax, jax.numpy as jnp
     from repro.graphs import delaunay_graph
-    from repro.grblas import Descriptor, mxm, make_row_partition
+    from repro.grblas import (Descriptor, SparseMatrix, mxm,
+                              make_row_partition)
     from repro.grblas.semiring import plap_edge_semiring
+    ring = plap_edge_semiring(1.5, eps=1e-8)
 
     W, _ = delaunay_graph(9, seed=0)
-    mesh = jax.make_mesh((8,), ("data",))
-    Ap = make_row_partition(W, 8)
-    rng = np.random.default_rng(0)
-    X = jnp.asarray(rng.standard_normal((W.n_rows, 3)), jnp.float32)
+    mesh = jax.make_mesh((N,), ("data",))
     d = Descriptor(backend="dist", mesh=mesh)
+    rng = np.random.default_rng(0)
 
-    # reals ring, pre-built partition through the unified API
+    # k sweep: multivectors through the halo plan == coo, reals + edge
+    Ap = make_row_partition(W, N)
+    assert Ap.mode == "halo", Ap.mode
+    for k in (1, 8, 32):
+        shape = (W.n_rows,) if k == 1 else (W.n_rows, k)
+        X = jnp.asarray(rng.standard_normal(shape), jnp.float32)
+        want = np.asarray(mxm(W, X))
+        got = np.asarray(mxm(Ap, X, desc=d))
+        np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+        wante = np.asarray(mxm(W, X, ring))
+        gote = np.asarray(mxm(Ap, X, ring, desc=d))
+        np.testing.assert_allclose(gote, wante, rtol=2e-4, atol=2e-5)
+
+    # graph-aware placement is TRANSPARENT: X in, Y out, original row
+    # space — the layout permutes internally (regression: the pre-halo
+    # code returned Y in permuted space and never applied perm back)
+    X = jnp.asarray(rng.standard_normal((W.n_rows, 3)), jnp.float32)
     want = np.asarray(mxm(W, X))
-    got = np.asarray(mxm(Ap, X, desc=d))
-    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
-
-    # graph-aware placement permutation preserves the product
     labels = (np.arange(W.n_rows) * 7) % 4
-    Ap2 = make_row_partition(W, 8, assignment=labels)
-    Xp = X[Ap2.perm]
-    got2 = np.asarray(mxm(Ap2, Xp, desc=d))
-    want2 = np.asarray(mxm(W, X))[Ap2.perm]
-    np.testing.assert_allclose(got2, want2, rtol=2e-5, atol=2e-5)
+    Ap2 = make_row_partition(W, N, assignment=labels, mode="gather")
+    assert Ap2.perm is not None
+    got2 = np.asarray(mxm(Ap2, X, desc=d))
+    np.testing.assert_allclose(got2, want, rtol=2e-5, atol=2e-5)
+    wante = np.asarray(mxm(W, X, ring))
+    # edge ring on the gather schedule (the auto fallback keeps it
+    # production-reachable for dense cuts / bad placement)
+    got2g = np.asarray(mxm(Ap2, X, ring, desc=d))
+    np.testing.assert_allclose(got2g, wante, rtol=2e-4, atol=2e-5)
+    # same contract on a halo plan (force past the density fallback)
+    Ap2h = make_row_partition(W, N, assignment=labels, mode="halo")
+    got2h = np.asarray(mxm(Ap2h, X, desc=d))
+    np.testing.assert_allclose(got2h, want, rtol=2e-5, atol=2e-5)
+    got2e = np.asarray(mxm(Ap2h, X, ring, desc=d))
+    np.testing.assert_allclose(got2e, wante, rtol=2e-4, atol=2e-5)
 
-    # edge semiring (p-Laplacian apply), distributed
-    ring = plap_edge_semiring(1.5, eps=1e-8)
-    want3 = np.asarray(mxm(W, X, ring))
-    got3 = np.asarray(mxm(Ap, X, ring, desc=d))
-    np.testing.assert_allclose(got3, want3, rtol=2e-4, atol=2e-5)
-
-    # a raw SparseMatrix auto-partitions + memoizes on the container
+    # a raw SparseMatrix auto-partitions + memoizes on the container,
+    # keyed on (shards, vals buffer, layout) — swapping the value
+    # buffers on the same pattern must NOT reuse the stale partition
     got5 = np.asarray(mxm(W, X, desc=d))
     np.testing.assert_allclose(got5, want, rtol=2e-5, atol=2e-5)
-    assert 8 in W._dist_partitions          # partition memoized
-    got6 = np.asarray(mxm(W, X, ring, desc=d))
-    np.testing.assert_allclose(got6, want3, rtol=2e-4, atol=2e-5)
+    stale_key = (N, id(W.ell_vals), False)
+    assert stale_key in W._dist_partitions
+    n_keys = len(W._dist_partitions)
+    W.vals, W.ell_vals = W.vals * 2.0, W.ell_vals * 2.0
+    got5b = np.asarray(mxm(W, X, desc=d))
+    np.testing.assert_allclose(got5b, 2.0 * want, rtol=2e-5, atol=2e-5)
+    # re-partitioned AND the superseded entry was evicted (no growth)
+    assert (N, id(W.ell_vals), False) in W._dist_partitions
+    assert stale_key not in W._dist_partitions
+    assert len(W._dist_partitions) == n_keys
+    W.vals, W.ell_vals = W.vals / 2.0, W.ell_vals / 2.0
+
     # auto backend picks dist once a mesh is in the descriptor
     from repro.grblas import available_backends
     assert available_backends(W, X, desc=d)[0] == "dist"
+
+    # rectangular reals ride the gather fallback (regression: the old
+    # path sliced the output to n_cols rows and mis-padded X)
+    n = W.n_rows
+    r, c, v = W.host_coo()
+    c2 = np.where(np.arange(len(c)) % 2 == 0, c, c + n)  # spill into cols >= n
+    Wrect = SparseMatrix.from_coo(r, c2, v, (n, 2 * n), build_ell=True)
+    Xr = jnp.asarray(rng.standard_normal((2 * n, 3)), jnp.float32)
+    wantr = np.asarray(mxm(Wrect, Xr))
+    gotr = np.asarray(mxm(Wrect, Xr, desc=d))
+    assert gotr.shape == (n, 3)
+    np.testing.assert_allclose(gotr, wantr, rtol=2e-5, atol=2e-5)
+
     print("DIST_SPMV_OK")
 """)
 
@@ -61,6 +106,7 @@ SCRIPT = textwrap.dedent("""
 def test_dist_spmv_subprocess():
     r = subprocess.run([sys.executable, "-c", SCRIPT],
                        env={"PYTHONPATH": str(SRC), "PATH": "/usr/bin:/bin",
-                            "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+                            "HOME": "/root", "JAX_PLATFORMS": "cpu",
+                            "DIST_TEST_DEVICES": N_DEV},
                        capture_output=True, text=True, timeout=560)
     assert "DIST_SPMV_OK" in r.stdout, r.stdout + "\n" + r.stderr

@@ -23,3 +23,23 @@ def test_partition_balanced_and_better_than_contiguous():
     # of edges; spectral placement must cut far fewer
     assert cut_p < 0.8 * cut_c, (cut_p, cut_c)
     assert np.isfinite(info["rcut"])
+
+
+def test_partition_for_mesh_builds_halo_partition():
+    """End-to-end placement: PSC assignment -> halo row partition whose
+    wire volume reflects the (small) spectral cut, not O(n)."""
+    from repro.graphs.partition import partition_for_mesh
+
+    W, _ = delaunay_graph(9, seed=0, locality_order=False)
+    Ap, labels, info = partition_for_mesh(W, 4, seed=0)
+    assert Ap.n_shards == 4 and Ap.perm is not None
+    assert info["halo"]["mode"] == "halo"
+    assert info["halo"]["halo"] < info["halo"]["gather"]
+    # the un-permuted labels must land each row's cluster on one shard:
+    # shard of row i == shard holding position inv_perm[i]
+    shard_of = np.asarray(Ap.inv_perm) // Ap.rows_per_shard
+    # rows sharing a cluster overwhelmingly share a shard (balanced
+    # rebalancing may move a few rows across)
+    agree = sum(np.bincount(shard_of[labels == c]).max()
+                for c in range(labels.max() + 1))
+    assert agree >= 0.9 * W.n_rows

@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
 .PHONY: verify imports test test-dist dryrun-smoke bench-kernels \
-	bench-multilevel bench-dist
+	bench-multilevel bench-dist bench-solvers
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -28,6 +28,13 @@ bench-multilevel:
 	$(PY) -c "from pathlib import Path; \
 	import benchmarks.kernels_bench as b; \
 	b.sweep_multilevel(out_path=Path('BENCH_multilevel.json'))"
+
+# Solver-driver sweep (graph x p x {newton, scf, inverse_power},
+# DESIGN.md §7); commits driver equivalence + cost to BENCH_solvers.json.
+bench-solvers:
+	$(PY) -c "from pathlib import Path; \
+	import benchmarks.kernels_bench as b; \
+	b.sweep_solvers(out_path=Path('BENCH_solvers.json'))"
 
 # Halo-exchange vs all-gather distributed SpMM (shards x k x placement
 # on SBM + delaunay) over a forced 8-device host platform; commits the

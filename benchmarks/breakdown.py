@@ -12,8 +12,8 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import lobpcg, kmeans as km, metrics
-from repro.core.psc import PSCConfig, _minimize_at_p
+from repro.core import lobpcg, kmeans as km, metrics, solvers
+from repro.core.psc import PSCConfig
 from repro.graphs import delaunay_graph
 
 K = 4
@@ -31,14 +31,11 @@ def run(r=11):
     t_eig = time.time() - t0
 
     t0 = time.time()
-    p, n_hvp = 2.0, 0
-    while True:
-        p = max(cfg.p_target, p * cfg.p_factor)
-        res = _minimize_at_p(W, U, p, cfg)
+    n_hvp = 0
+    for p in solvers.p_schedule(cfg):
+        res = solvers.minimize_at_p(W, U, p, cfg)
         U = res.U
-        n_hvp += int(res.n_hvp)
-        if p <= cfg.p_target:
-            break
+        n_hvp += int(res.n_apply)
     jax.block_until_ready(U)
     t_cont = time.time() - t0
 

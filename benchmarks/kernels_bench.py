@@ -11,9 +11,12 @@ synthetic graph and emits BENCH_backends.json at the repo root so later
 PRs have a perf trajectory for the dispatch table, plus the SELL-C-σ
 sweep (C x sigma x reorder vs coo/ell, skewed-degree + delaunay) into
 BENCH_sellcs.json, plus the flat-vs-multilevel V-cycle sweep
-(131k-524k-node graphs, DESIGN.md §6) into BENCH_multilevel.json.
-``make bench-kernels`` regenerates all three; ``make bench-multilevel``
-reruns just the last (it solves big graphs end to end — the long pole).
+(131k-524k-node graphs, DESIGN.md §6) into BENCH_multilevel.json, plus
+the solver-driver sweep (graph × p × {newton, scf, inverse_power},
+DESIGN.md §7) into BENCH_solvers.json.  ``make bench-kernels``
+regenerates all of them; ``make bench-multilevel`` / ``make
+bench-solvers`` rerun just their own sweep (the multilevel one solves
+big graphs end to end — the long pole).
 
 The distributed sweep (halo exchange vs all-gather, shards × k ×
 placement, DESIGN.md §4) lives in ``sweep_dist`` and emits
@@ -359,6 +362,71 @@ def sweep_multilevel(out_path=None, k=4, seed=0):
     return payload
 
 
+# --------------------------------------------------- solver-driver sweep
+
+def sweep_solvers(out_path=None, k=4, seed=0):
+    """Registry-driver sweep (DESIGN.md §7): graph family × p × solver,
+    recording wall clock, RCut and (where a planted truth exists)
+    clustering accuracy.  Emits BENCH_solvers.json — the committed
+    evidence that the three continuation drivers land equivalent cuts
+    and what each costs, plus the p=1.0 sparsest-cut row only the
+    inverse-power driver can serve.  ``make bench-solvers`` regenerates.
+    """
+    from repro.core import PSCConfig, metrics, p_spectral_cluster
+    from repro.graphs import gaussian_blobs_knn
+
+    graphs = [
+        # second element: planted labels where the family has them
+        # (delaunay's is vertex coordinates — no planted truth)
+        ("sbm4_120", lambda: sbm_graph([30] * k, p_in=0.5, p_out=0.03,
+                                       seed=5)[:2]),
+        ("blobs4_480", lambda: gaussian_blobs_knn(120, k, seed=1)[:2]),
+        ("delaunay_r10", lambda: (delaunay_graph(10, seed=seed)[0], None)),
+    ]
+    payload = {"platform": jax.default_backend(), "k": k, "entries": []}
+    for name, make in graphs:
+        W, truth = make()
+        for p_target in (1.4, 1.1, 1.0):
+            for solver in ("newton", "scf", "inverse_power"):
+                if p_target == 1.0 and solver != "inverse_power":
+                    continue        # p=1 is outside newton/scf's open range
+                cfg = PSCConfig(k=k, p_target=p_target, newton_iters=15,
+                                tcg_iters=10, kmeans_restarts=4, seed=seed,
+                                solver=solver, scf_sweeps=10, ipm_iters=100)
+                t0 = time.time()
+                res = p_spectral_cluster(W, cfg)
+                wall = time.time() - t0
+                row = {"graph": name, "n": W.n_rows, "nnz": W.nnz,
+                       "p_target": p_target, "solver": solver,
+                       "wall_s": round(wall, 2),
+                       "rcut": round(float(res.rcut), 5),
+                       "n_apply": int(sum(res.hvp_counts))}
+                if truth is not None:
+                    row["accuracy"] = round(float(
+                        metrics.clustering_accuracy(res.labels, truth, k)), 4)
+                payload["entries"].append(row)
+                print(f"[solvers] {name} p={p_target} {solver}: "
+                      f"{wall:.1f}s rcut={row['rcut']}"
+                      + (f" acc={row.get('accuracy')}" if truth is not None
+                         else ""))
+    # headline: per (graph, p) the cheapest driver within 2% RCut of the
+    # best — what the registry buys over newton-everywhere
+    head = []
+    seen = {(e["graph"], e["p_target"]) for e in payload["entries"]}
+    for g, p in sorted(seen):
+        rows = [e for e in payload["entries"]
+                if e["graph"] == g and e["p_target"] == p]
+        best_rcut = min(e["rcut"] for e in rows)
+        ok = [e for e in rows if e["rcut"] <= best_rcut * 1.02 + 1e-9]
+        w = min(ok, key=lambda e: e["wall_s"])
+        head.append({"graph": g, "p_target": p, "winner": w["solver"],
+                     "wall_s": w["wall_s"], "rcut": w["rcut"]})
+    payload["headline_cheapest_within_2pct_rcut"] = head
+    if out_path is not None:
+        Path(out_path).write_text(json.dumps(payload, indent=2) + "\n")
+    return payload
+
+
 def main(csv=True):
     lines = []
     W, _ = delaunay_graph(12, seed=0, build_bsr=True, block_size=128)
@@ -407,6 +475,10 @@ def main(csv=True):
                      f"levels={b['hierarchy_levels']}"
                      f"_speedup_vs_flat={b['speedup_vs_flat']}"
                      f"_rcut_gap_pct={b['rcut_gap_pct']}")
+    sol = sweep_solvers(out_path=_ROOT / "BENCH_solvers.json")
+    for h in sol["headline_cheapest_within_2pct_rcut"]:
+        lines.append(f"solver_winner_{h['graph']}_p{h['p_target']},"
+                     f"{h['wall_s']},solver={h['winner']}_rcut={h['rcut']}")
     if csv:
         for line in lines:
             print(line)

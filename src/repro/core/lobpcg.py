@@ -102,12 +102,17 @@ def lobpcg(matvec: Callable, X0: jnp.ndarray, k: int,
 def smallest_eigvecs(W: SparseMatrix, k: int, normalized: bool = False,
                      seed: int = 0, max_iters: int = 200,
                      tol: float = 1e-6,
-                     desc: Optional[Descriptor] = None
+                     desc: Optional[Descriptor] = None,
+                     X0: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Smallest-k eigenpairs of the graph Laplacian of W.
 
     ``desc`` steers the inner Laplacian SpMM (must be a backend capable
-    of the reals ring; the tiny-graph dense-eigh path ignores it)."""
+    of the reals ring; the tiny-graph dense-eigh path ignores it).
+    ``X0`` (n, >=1) warm-starts the LOBPCG block: its columns seed the
+    search subspace (padded to block width with random vectors) — the
+    SCF driver restarts each reweighted eigensolve from the previous
+    sweep's eigenvectors this way.  The dense exact path ignores it."""
     n = W.n_rows
     if n <= 1024:  # dense exact path for tiny graphs
         L = jnp.diag(W.row_sums()) - W.to_dense()
@@ -120,7 +125,13 @@ def smallest_eigvecs(W: SparseMatrix, k: int, normalized: bool = False,
     mv = laplacian_matvec(W, normalized, desc=desc)
     m = min(max(2 * k, k + 4), n)
     key = jax.random.PRNGKey(seed)
-    X0 = jax.random.normal(key, (n, m), jnp.float32)
+    rand = jax.random.normal(key, (n, m), jnp.float32)
+    if X0 is not None:
+        warm = X0 if X0.ndim == 2 else X0[:, None]
+        X0 = rand.astype(warm.dtype).at[:, : min(warm.shape[1], m)].set(
+            warm[:, : min(warm.shape[1], m)])
+    else:
+        X0 = rand
     # seed the constant vector (known nullvector) for fast convergence
     X0 = X0.at[:, 0].set(1.0)
     deg = W.row_sums()

@@ -1,13 +1,19 @@
-"""pMulti baseline (Luo, Huang, Ding, Nie 2010): one-at-a-time full
-eigenvector analysis of the p-Laplacian.
+"""pMulti baseline (Luo, Huang, Ding, Nie 2010) — one-release shim.
 
-Eigenvectors are computed sequentially; each minimizes the single-column
-p-Rayleigh quotient with a projected gradient method, kept orthogonal
-(2-norm) to the previously found ones by Gram-Schmidt projection after
-every step — the scheme the paper compares against in Table I.
+The private projected-gradient loop that used to live here
+(``_minimize_single``) is gone: it duplicated the inverse-power driver
+while constructing its own jitted steps per column (k traces per call)
+and did not thread descriptor routing through the same contract as the
+rest of the pipeline.  ``p_multi`` now delegates to the registry's
+"inverse_power" driver (core.solvers.inverse_power) — same sequential
+deflated minimization, one memoized trace, every SpMM routed through
+``api.mxm`` under the configured backend — and will be removed next
+release; call ``p_spectral_cluster(W, PSCConfig(solver="inverse_power"))``
+or ``core.solvers.minimize_at_p`` directly.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Tuple
 
 import numpy as np
@@ -16,35 +22,7 @@ import jax.numpy as jnp
 
 from repro.grblas.containers import SparseMatrix
 from repro.grblas.api import Descriptor
-from repro.core import plap, kmeans as km, metrics, lobpcg
-
-
-def _minimize_single(W, u0, Uprev, p, eps, iters=300, lr0=0.5, desc=None):
-    """Projected gradient descent with backtracking on one column."""
-
-    def f(u):
-        return plap.value(W, u[:, None], p, eps, desc=desc)
-
-    def project(u):
-        if Uprev.shape[1] > 0:
-            u = u - Uprev @ (Uprev.T @ u)
-        return u / jnp.maximum(jnp.linalg.norm(u), 1e-12)
-
-    @jax.jit
-    def step(u, lr):
-        g = plap.euc_grad(W, u[:, None], p, eps, desc=desc)[:, 0]
-        # project gradient to the feasible tangent (orthogonality + sphere)
-        if Uprev.shape[1] > 0:
-            g = g - Uprev @ (Uprev.T @ g)
-        g = g - u * jnp.dot(u, g)
-        u_try = project(u - lr * g)
-        improved = f(u_try) < f(u)
-        return jnp.where(improved, u_try, u), jnp.where(improved, lr * 1.1, lr * 0.5)
-
-    u, lr = project(u0), jnp.array(lr0)
-    for _ in range(iters):
-        u, lr = step(u, lr)
-    return u
+from repro.core import kmeans as km, lobpcg, metrics, solvers
 
 
 def p_multi(W: SparseMatrix, k: int, p: float = 1.2, eps: float = 1e-8,
@@ -52,22 +30,28 @@ def p_multi(W: SparseMatrix, k: int, p: float = 1.2, eps: float = 1e-8,
             desc: Descriptor | None = None) -> Tuple[np.ndarray, float]:
     """Sequential p-eigenvectors + kmeans. Returns (labels, rcut).
 
+    Deprecated shim over the "inverse_power" registry driver: the p=2
+    LOBPCG start, then one deflated inverse-power minimization at ``p``
+    directly (no continuation — the historical pMulti behavior).
     ``desc`` selects the grblas backend for every inner SpMM (None =
-    platform auto; the p=2 initialization falls back to auto if the
-    named backend cannot run the reals ring)."""
+    platform auto); registry validation applies, so ``p`` outside
+    [1, 2] raises ValueError."""
+    from repro.core.psc import PSCConfig
     from repro.grblas import api as grb_api
 
-    n = W.n_rows
+    warnings.warn(
+        "repro.core.pmulti.p_multi is deprecated: use "
+        "p_spectral_cluster(W, PSCConfig(solver='inverse_power')) or "
+        "core.solvers.minimize_at_p; this shim will be removed next "
+        "release", DeprecationWarning, stacklevel=2)
+    cfg = PSCConfig(k=k, p_target=p, eps=eps, seed=seed,
+                    solver="inverse_power", ipm_iters=iters,
+                    backend=(desc.backend if desc is not None else "auto"),
+                    interpret=(desc.interpret if desc is not None else False))
     _, U2 = lobpcg.smallest_eigvecs(
         W, k, seed=seed, desc=grb_api.capable_desc(W, desc=desc, k=k))
-    cols = []
-    for l in range(k):
-        Uprev = (jnp.stack(cols, axis=1) if cols
-                 else jnp.zeros((n, 0), U2.dtype))
-        u = _minimize_single(W, U2[:, l], Uprev, p, eps, iters=iters,
-                             desc=desc)
-        cols.append(u)
-    U = jnp.stack(cols, axis=1)
+    rep = solvers.minimize_at_p(W, U2, p, cfg)
+    U = rep.U
     Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
     labels, _ = km.kmeans(jax.random.PRNGKey(seed), Xn, k)
     return np.asarray(labels), float(metrics.rcut(W, labels, k))

@@ -3,13 +3,16 @@
   1. p=2 start: smallest-k eigenvectors of the graph Laplacian (LOBPCG,
      dense-eigh fallback) — classical spectral clustering coordinates.
   2. p-continuation: for p_t = max(p_target, 0.9^t * 2.0), minimize
-     F_{p_t}(U) over Gr(k,n) with trust-region Newton + truncated CG
-     (core.grassmann), warm-started from the previous p.
+     F_{p_t}(U) over Gr(k,n) with the driver ``PSCConfig.solver`` names
+     (core.solvers registry, DESIGN.md §7): "newton" (trust-region
+     Newton + tCG, the paper's driver), "scf" (linear eigenproblems on
+     the IRLS-reweighted graph), or "inverse_power" (sequential
+     deflated columns, the p → 1 end), warm-started from the previous p.
   3. Discretize the k nonlinear eigenvectors with kmeans++ (core.kmeans).
 
 Hot loops are the SpMM-shaped ops from grblas (+ Pallas kernels on TPU);
-the HVP inside tCG is the paper's Algorithm 1 (or the fused matrix-free
-variant — select with hvp_mode).
+every driver consumes the same ``api.mxm`` rings, so backend selection
+(``PSCConfig.backend``) and solver selection compose freely.
 
 Two execution-shaping knobs, both provably transparent to callers:
 
@@ -18,18 +21,19 @@ Two execution-shaping knobs, both provably transparent to callers:
     gathers then walk the multivector near-sequentially — and every
     row-indexed output (labels, U, init_labels) is un-permuted before
     PSCResult is built.
-  * The per-p Newton minimization is one jitted function, memoized per
-    execution signature with ``p`` as a *traced* scalar wherever the
-    backend allows (every jnp path), so the p-continuation loop hits one
-    trace for the whole schedule instead of re-tracing per level.
-    Pallas kernel paths bake (p, eps) into the kernel as static
-    arguments, so there the memo key includes p (trace per level, cached
-    across runs).
+  * Each driver's per-p minimization is one jitted function, memoized
+    per execution signature with ``p`` as a *traced* scalar wherever
+    the backend allows (every jnp path), so the p-continuation loop
+    hits one trace for the whole schedule instead of re-tracing per
+    level.  Pallas kernel paths bake (p, eps) into the kernel as static
+    arguments, so there the memo key includes p (trace per level,
+    cached across runs).  The memo scaffolding lives in
+    core.solvers.registry; ``_NEWTON_TRACES``/``_jitted_minimize`` stay
+    importable here as one-release aliases.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import numpy as np
@@ -39,14 +43,15 @@ import jax.numpy as jnp
 from repro.grblas.containers import SparseMatrix
 from repro.grblas import api as grb_api
 from repro.grblas.api import Descriptor
-from repro.core import plap, kmeans as km, lobpcg, metrics
-from repro.core.grassmann import rtr_minimize, RTRResult
+from repro.core import plap, kmeans as km, lobpcg, metrics, solvers
+from repro.core.solvers import p_schedule  # re-export (vcycle + benches)
 
 
 @dataclasses.dataclass
 class PSCConfig:
     k: int = 4                      # number of clusters / eigenvectors
-    p_target: float = 1.2           # final p (paper: p in (1,2])
+    p_target: float = 1.2           # final p (paper: p in (1,2]; the
+                                    # inverse_power driver reaches p=1)
     p_factor: float = 0.9           # continuation ratio (paper follows [4])
     eps: float = 1e-8               # phi_p smoothing
     newton_iters: int = 30          # outer RTR iterations per p level
@@ -57,6 +62,21 @@ class PSCConfig:
     hvp_mode: str = "graphblas"     # "graphblas" (Alg.1) | "matrix_free"
     normalized_init: bool = False
     seed: int = 0
+    # solver driver for the per-p minimization (core.solvers registry):
+    # "newton" | "scf" | "inverse_power".  Validated at construction —
+    # an unknown name raises SolverUnavailableError, a p_target (or a
+    # continuation schedule value) outside the driver's supported range
+    # raises ValueError here instead of NaNs mid-loop.
+    solver: str = "newton"
+    # scf driver knobs: max reweight/eigensolve sweeps per p level and
+    # the subspace-drift stopping tolerance (sum of squared principal
+    # sines between consecutive sweeps)
+    scf_sweeps: int = 12
+    scf_tol: float = 1e-5
+    # inverse_power driver knobs: projected-gradient steps per column
+    # and the initial backtracking step size
+    ipm_iters: int = 200
+    ipm_lr0: float = 0.5
     # grblas execution backend for the hot loop.  The hot loop issues
     # edge-semiring ops, so the only named backends that can serve it are
     # "coo", (with the SELL-C-σ layout built) "sellcs", and (with the BSR
@@ -77,12 +97,17 @@ class PSCConfig:
     # labels/U/metrics are returned on THIS graph either way.
     multilevel: object = None
 
+    def __post_init__(self):
+        # config-time applicability check: solver name resolves and the
+        # whole continuation schedule sits in its supported p range
+        solvers.validate_config(self)
+
     def descriptor(self) -> Descriptor:
         return Descriptor(backend=self.backend, interpret=self.interpret)
 
     def validate_backend(self, W: SparseMatrix) -> None:
         """Shape-only capability probe: fail at config-application time,
-        not mid-Newton-iteration."""
+        not mid-minimization."""
         desc = self.descriptor()
         if desc.backend == "auto":
             return
@@ -93,7 +118,7 @@ class PSCConfig:
         probe = jax.ShapeDtypeStruct((W.n_rows, self.k), jnp.float32)
         _backends.select_backend(W, probe,
                                  plap_edge_semiring(2.0, self.eps), desc)
-        if self.hvp_mode == "matrix_free":
+        if self.solver == "newton" and self.hvp_mode == "matrix_free":
             _backends.select_backend(W, (probe, probe),
                                      plap_hvp_edge_semiring(2.0, self.eps),
                                      desc)
@@ -107,108 +132,12 @@ class PSCResult:
     ncut: float
     p_path: list
     fvals: list                     # F_p at the end of each p level
-    hvp_counts: list                # Hessian-apply count per level
+    hvp_counts: list                # operator-apply count per level
     init_labels: Optional[np.ndarray] = None  # p=2 (Spec) labels
     init_rcut: float = float("nan")
     # multilevel runs only: per-level refinement records (level id, n,
     # nnz, p, fval, n_hvp) appended as the V-cycle walks up
     levels: Optional[list] = None
-
-
-# --- memoized jitted Newton minimization (one trace per execution
-# signature, not per continuation level) ----------------------------------
-
-_NEWTON_CACHE: dict = {}
-_NEWTON_TRACES: list = []   # one entry appended per *trace*; tests assert
-                            # the continuation loop doesn't grow it
-
-
-def _needs_static_p(cfg: PSCConfig, W: SparseMatrix, U0) -> bool:
-    """Would the backend serving the hot loop bake (p, eps) into a
-    Pallas kernel?  Then p cannot be a tracer.  The answer lives on the
-    backend registry (Backend.static_ring_params) — this probes the same
-    dispatch the hot loop will run (shape-only, like validate_backend)
-    instead of duplicating the registry's capability rules here.  Pallas
-    paths are only taken on TPU or under interpret; everywhere else the
-    jnp paths keep the traced-p single trace."""
-    if not (cfg.interpret or jax.default_backend() == "tpu"):
-        return False
-    from repro.grblas import backends as _backends
-    from repro.grblas.semiring import (plap_edge_semiring,
-                                       plap_hvp_edge_semiring)
-
-    desc = cfg.descriptor()
-    probe = jax.ShapeDtypeStruct((W.n_rows, U0.shape[-1]), U0.dtype)
-    probes = [(plap_edge_semiring(2.0, cfg.eps), probe)]
-    if cfg.hvp_mode == "matrix_free":
-        probes.append((plap_hvp_edge_semiring(2.0, cfg.eps), (probe, probe)))
-    for ring, X in probes:
-        try:
-            be = _backends.select_backend(W, X, ring, desc)
-        except _backends.BackendUnavailableError:
-            continue          # validate_backend already raised for real runs
-        if be.static_ring_params:
-            return True
-    return False
-
-
-def _jitted_minimize(cfg: PSCConfig, p: float, W: SparseMatrix, U0):
-    """The jitted per-p trust-region minimization, memoized per
-    (backend, interpret, hvp_mode, eps, iteration budget[, p]).  W rides
-    along as a pytree argument, so one cached callable serves every
-    graph of matching layout signature."""
-    static_p = float(p) if _needs_static_p(cfg, W, U0) else None
-    key = (cfg.backend, cfg.interpret, cfg.hvp_mode, cfg.eps,
-           cfg.newton_iters, cfg.tcg_iters, cfg.grad_tol, static_p)
-    fn = _NEWTON_CACHE.get(key)
-    if fn is not None:
-        return fn, static_p
-
-    desc = cfg.descriptor()
-    eps, hvp_mode = cfg.eps, cfg.hvp_mode
-    newton_iters, tcg_iters, grad_tol = (cfg.newton_iters, cfg.tcg_iters,
-                                         cfg.grad_tol)
-
-    def run(W, U0, p_run):
-        _NEWTON_TRACES.append(key)
-        f = lambda U: plap.value(W, U, p_run, eps, desc=desc)
-        g = lambda U: plap.euc_grad(W, U, p_run, eps, desc=desc)
-        if hvp_mode == "graphblas":
-            h = lambda U, eta: plap.hess_eta_graphblas(W, U, eta, p_run, eps,
-                                                       desc=desc)
-        else:
-            h = lambda U, eta: plap.hess_eta_matrix_free(W, U, eta, p_run,
-                                                         eps, desc=desc)
-        return rtr_minimize(f, g, h, U0, max_iters=newton_iters,
-                            tcg_iters=tcg_iters, grad_tol=grad_tol)
-
-    if static_p is None:
-        fn = jax.jit(run)
-    else:
-        fn = jax.jit(lambda W, U0: run(W, U0, static_p))
-    _NEWTON_CACHE[key] = fn
-    return fn, static_p
-
-
-def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig) -> RTRResult:
-    fn, static_p = _jitted_minimize(cfg, p, W, U0)
-    if static_p is not None:
-        return fn(W, U0)
-    # p rides in U0's dtype so float64 pipelines keep the full-precision
-    # continuation values the pre-memoized code passed as Python floats
-    return fn(W, U0, jnp.asarray(p, U0.dtype))
-
-
-def p_schedule(cfg: PSCConfig) -> list:
-    """The continuation schedule p_t = max(p_target, 2.0 * factor^t),
-    t >= 1 — shared by the flat loop below and the nested multilevel
-    schedule (repro.multilevel.vcycle)."""
-    ps, p = [], 2.0
-    while True:
-        p = max(cfg.p_target, p * cfg.p_factor)
-        ps.append(p)
-        if p <= cfg.p_target:
-            return ps
 
 
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
@@ -240,14 +169,8 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
                                iters=cfg.kmeans_iters)
     init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
 
-    # -- stage 2: p-continuation on the Grassmann manifold
-    p_path, fvals, hvps = [], [], []
-    for p in p_schedule(cfg):
-        res = _minimize_at_p(W, U, p, cfg)
-        U = res.U
-        p_path.append(p)
-        fvals.append(float(res.fval))
-        hvps.append(int(res.n_hvp))
+    # -- stage 2: p-continuation under the registered driver
+    U, p_path, fvals, hvps = solvers.p_continuation(W, U, cfg)
 
     # -- stage 3: kmeans discretization of the nonlinear eigenvectors
     key, sub = jax.random.split(key)
@@ -281,3 +204,19 @@ def spectral_cluster(W: SparseMatrix, k: int, seed: int = 0,
     _, U = lobpcg.smallest_eigvecs(W, k, normalized=normalized, seed=seed)
     labels, _ = km.kmeans(jax.random.PRNGKey(seed), U, k)
     return np.asarray(labels), float(metrics.rcut(W, labels, k))
+
+
+# --- one-release aliases: the driver layer moved to core.solvers ----------
+# (consumers: benchmarks/breakdown.py, the V-cycle pre-PR-6, tests that
+# pin the no-retrace contract.  New code imports repro.core.solvers.)
+
+_NEWTON_TRACES = solvers.SOLVER_TRACES          # same list object
+_NEWTON_CACHE = solvers.registry._TRACE_CACHE   # same dict object
+_needs_static_p = solvers.newton._needs_static_p
+_jitted_minimize = solvers.newton._jitted_minimize
+
+
+def _minimize_at_p(W: SparseMatrix, U0, p, cfg: PSCConfig):
+    """Deprecated alias: one continuation level under cfg.solver
+    (returns a SolverReport; ``n_hvp`` stays readable on it)."""
+    return solvers.minimize_at_p(W, U0, p, cfg)

@@ -1,0 +1,33 @@
+"""repro.core.solvers — the solver-driver registry (DESIGN.md §7).
+
+Importing this package registers the three drivers (newton, scf,
+inverse_power); ``PSCConfig(solver=...)`` threads selection through the
+pipeline, the multilevel V-cycle takes per-level choices, and a new
+driver is one ``register_solver`` call.
+"""
+from repro.core.solvers.registry import (
+    SOLVER_TRACES,
+    Solver,
+    SolverReport,
+    SolverState,
+    SolverUnavailableError,
+    backend_bakes_ring_params,
+    memoized,
+    mark_trace,
+    minimize_at_p,
+    p_continuation,
+    p_schedule,
+    register_solver,
+    registered_solvers,
+    resolve_solver,
+    validate_config,
+)
+from repro.core.solvers import newton, scf, inverse_power  # register drivers
+
+__all__ = [
+    "SOLVER_TRACES", "Solver", "SolverReport", "SolverState",
+    "SolverUnavailableError", "backend_bakes_ring_params", "memoized",
+    "mark_trace", "minimize_at_p", "p_continuation", "p_schedule",
+    "register_solver", "registered_solvers", "resolve_solver",
+    "validate_config", "newton", "scf", "inverse_power",
+]

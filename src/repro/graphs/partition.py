@@ -26,8 +26,8 @@ MULTILEVEL_AUTO_THRESHOLD = 20_000
 def partition(W: SparseMatrix, n_parts: int, p_target: float = 1.4,
               seed: int = 0, balance: bool = True,
               cfg: Optional[PSCConfig] = None,
-              multilevel: Union[bool, str] = "auto"
-              ) -> Tuple[np.ndarray, dict]:
+              multilevel: Union[bool, str] = "auto",
+              solver: str = "newton") -> Tuple[np.ndarray, dict]:
     """Balanced min-RCut partition of graph W into n_parts.
 
     Returns (assignment (n,), info) where info carries the cut metrics
@@ -38,12 +38,17 @@ def partition(W: SparseMatrix, n_parts: int, p_target: float = 1.4,
     ``multilevel``: True forces the V-cycle fast path, False forces the
     flat solve, "auto" (default) picks the V-cycle once the graph
     crosses MULTILEVEL_AUTO_THRESHOLD vertices — big graphs stop paying
-    full-graph solve cost just to be placed on devices.  An explicit
-    ``cfg`` wins: its own ``multilevel`` field is left untouched.
+    full-graph solve cost just to be placed on devices.  ``solver``
+    names the continuation driver (core.solvers registry: "newton" |
+    "scf" | "inverse_power") — placement is setup-time work, so the
+    cheap SCF driver is a reasonable pick on big graphs.  An explicit
+    ``cfg`` wins: its own ``multilevel``/``solver`` fields are left
+    untouched.
     """
     if cfg is None:
         cfg = PSCConfig(k=n_parts, p_target=p_target, seed=seed,
-                        newton_iters=15, tcg_iters=10, kmeans_restarts=4)
+                        newton_iters=15, tcg_iters=10, kmeans_restarts=4,
+                        solver=solver)
         use_ml = (multilevel is True
                   or (multilevel == "auto"
                       and W.n_rows >= MULTILEVEL_AUTO_THRESHOLD))
@@ -94,6 +99,7 @@ def partition_for_mesh(W: SparseMatrix, n_shards: int, *,
                        p_target: float = 1.4, seed: int = 0,
                        cfg: Optional[PSCConfig] = None,
                        multilevel: Union[bool, str] = "auto",
+                       solver: str = "newton",
                        mode: str = "auto", sellcs: bool = False,
                        sell_c: int = 32):
     """Cluster W with its own algorithm, then build the halo-exchange
@@ -111,7 +117,7 @@ def partition_for_mesh(W: SparseMatrix, n_shards: int, *,
     from repro.grblas.dist import make_row_partition
 
     labels, info = partition(W, n_shards, p_target=p_target, seed=seed,
-                             cfg=cfg, multilevel=multilevel)
+                             cfg=cfg, multilevel=multilevel, solver=solver)
     Ap = make_row_partition(W, n_shards, assignment=labels, mode=mode,
                             sellcs=sellcs, sell_c=sell_c)
     info = dict(info)

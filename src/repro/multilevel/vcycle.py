@@ -55,6 +55,20 @@ class MultilevelConfig:
                                     # continuation steps — measurably
                                     # closes the RCut gap to flat on
                                     # noisy graphs)
+    coarse_solver: Optional[str] = None
+                                    # solver driver for the coarsest-level
+                                    # full continuation (core.solvers
+                                    # registry name; None = the flat
+                                    # config's own solver).  "scf" makes
+                                    # the coarse solve a sequence of
+                                    # cheap linear eigenproblems — the
+                                    # intended per-level split: SCF
+                                    # sweeps at the bottom, Newton
+                                    # refinement at the top
+    refine_solver: Optional[str] = None
+                                    # solver driver for the per-level
+                                    # refinement walking up (None = the
+                                    # flat config's own solver)
     refine_top_frac: float = 0.25   # refine only levels with
                                     # n ≥ frac × n_finest (the finest
                                     # level always qualifies).  Deep
@@ -92,7 +106,7 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
     ``multilevel`` field routed here).  Returns a PSCResult on the fine
     graph — same fields, same metrics, plus per-level refinement
     records in ``result.levels``."""
-    from repro.core import kmeans as km, metrics
+    from repro.core import kmeans as km, metrics, solvers
     from repro.core import psc as _psc
 
     hier = build_hierarchy(W, coarse_size=ml.coarse_size,
@@ -102,9 +116,13 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
                            layout_kwargs=_layout_kwargs(cfg),
                            sparsify=ml.sparsify,
                            max_agg=ml.match_max_agg)
-    flat_cfg = dataclasses.replace(cfg, multilevel=None)
+    # per-level solver choice (DESIGN.md §7): the coarsest full solve
+    # and the walk-up refinement each take their own registry driver
+    flat_cfg = dataclasses.replace(
+        cfg, multilevel=None, solver=ml.coarse_solver or cfg.solver)
     if hier.n_levels == 1:          # nothing to coarsen: flat solve
-        return _psc.p_spectral_cluster(W, flat_cfg)
+        return _psc.p_spectral_cluster(
+            W, dataclasses.replace(cfg, multilevel=None))
 
     # -- coarsest level: the whole flat pipeline (p=2 LOBPCG init + full
     # p-continuation).  Its labels seed init_labels on the fine graph.
@@ -119,7 +137,8 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
     tail = schedule[-max(int(ml.refine_p_steps), 1):]
     refine_cfg = dataclasses.replace(
         cfg, multilevel=None, newton_iters=ml.refine_newton_iters,
-        tcg_iters=ml.refine_tcg_iters, reorder="none")
+        tcg_iters=ml.refine_tcg_iters, reorder="none",
+        solver=ml.refine_solver or cfg.solver)
 
     # -- walk up: prolong -> (on the top levels) re-orthonormalize +
     # refine.  Deep levels are prolonged straight through: their
@@ -135,16 +154,16 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
         refine_cfg.validate_backend(Wl)
         U = jnp.linalg.qr(U)[0]                 # Grassmann retraction
         for p in tail:
-            res = _psc._minimize_at_p(Wl, U, p, refine_cfg)
+            res = solvers.minimize_at_p(Wl, U, p, refine_cfg)
             U = res.U
             p_path.append(p)
             fvals.append(float(res.fval))
-            hvps.append(int(res.n_hvp))
+            hvps.append(int(res.n_apply))
             level_records.append({
                 "level": lev, "n_levels": hier.n_levels,
                 "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
-                "fval": float(res.fval), "n_hvp": int(res.n_hvp),
-                "iters": int(res.iters)})
+                "fval": float(res.fval), "n_hvp": int(res.n_apply),
+                "iters": int(res.iters), "solver": refine_cfg.solver})
     U = jnp.linalg.qr(U)[0]
 
     # -- finest-level discretization + metrics (identical to the flat

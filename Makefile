@@ -1,8 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test test-dist dryrun-smoke bench-kernels \
-	bench-multilevel bench-dist bench-solvers
+.PHONY: verify imports test test-dist test-serve dryrun-smoke \
+	bench-kernels bench-multilevel bench-dist bench-solvers bench-serve
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -50,3 +50,15 @@ bench-dist:
 test-dist:
 	DIST_TEST_DEVICES=4 $(PY) -m pytest -x -q \
 	tests/test_dist_spmv.py tests/test_dist_halo.py
+
+# The clustering serve engine by name: bucketed-batch == flat pad
+# invariance, one-trace-per-bucket accounting, warm-cache + churn
+# semantics (DESIGN.md §8).
+test-serve:
+	$(PY) -m pytest -x -q tests/test_psc_serve.py tests/test_warm_cache.py
+
+# Regenerates the committed BENCH_serve.json: one trace per bucket over
+# a mixed stream, warm >= 3x cold at equal RCut, incremental churn
+# re-cluster >= 2x from-scratch within 2% RCut.  Asserts all three.
+bench-serve:
+	$(PY) benchmarks/serve_bench.py

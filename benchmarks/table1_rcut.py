@@ -8,11 +8,30 @@ from __future__ import annotations
 
 import time
 
-from repro.core import (PSCConfig, p_spectral_cluster, spectral_cluster,
-                        p_multi)
+import numpy as np
+
+from repro.core import PSCConfig, p_spectral_cluster, spectral_cluster, solvers
 from repro.graphs import delaunay_graph
 
 K = 4
+
+
+def p_multi_baseline(W, k, p=1.2, seed=0, iters=100):
+    """The historical pMulti recipe (Luo et al. 2010) via the registry:
+    p=2 LOBPCG start, ONE deflated inverse-power minimization at ``p``
+    (no continuation), kmeans.  Replaces the deleted core.pmulti shim —
+    same semantics, no private loop (DESIGN.md §3 migration table)."""
+    import jax
+
+    from repro.core import lobpcg, metrics
+    from repro.core.psc import discretize
+
+    cfg = PSCConfig(k=k, p_target=p, seed=seed, solver="inverse_power",
+                    ipm_iters=iters)
+    _, U2 = lobpcg.smallest_eigvecs(W, k, seed=seed)
+    rep = solvers.minimize_at_p(W, U2, p, cfg)
+    labels = discretize(rep.U, k, jax.random.PRNGKey(seed))
+    return np.asarray(labels), float(metrics.rcut(W, labels, k))
 
 
 def run(rs=(9, 10, 11), with_pmulti=True):
@@ -32,7 +51,7 @@ def run(rs=(9, 10, 11), with_pmulti=True):
         rcut_pm, t_pm = float("nan"), float("nan")
         if with_pmulti:
             t0 = time.time()
-            _, rcut_pm = p_multi(W, K, p=1.2, seed=0, iters=100)
+            _, rcut_pm = p_multi_baseline(W, K, p=1.2, seed=0, iters=100)
             t_pm = time.time() - t0
 
         rows.append({

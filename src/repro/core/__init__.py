@@ -2,11 +2,10 @@
 Grassmann manifold, with GraphBLAS-style algebra underneath and a
 registry of interchangeable solver drivers (core.solvers) on top."""
 from repro.core.psc import PSCConfig, PSCResult, p_spectral_cluster, spectral_cluster
-from repro.core.pmulti import p_multi
 from repro.core import plap, metrics, kmeans, lobpcg, grassmann, phi, solvers
 
 __all__ = [
     "PSCConfig", "PSCResult", "p_spectral_cluster", "spectral_cluster",
-    "p_multi", "plap", "metrics", "kmeans", "lobpcg", "grassmann", "phi",
+    "plap", "metrics", "kmeans", "lobpcg", "grassmann", "phi",
     "solvers",
 ]

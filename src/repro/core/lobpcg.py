@@ -99,6 +99,58 @@ def lobpcg(matvec: Callable, X0: jnp.ndarray, k: int,
     return evals[:k], X[:, :k]
 
 
+def lobpcg_fixed(matvec: Callable, X0: jnp.ndarray, k: int,
+                 iters: int = 20,
+                 precond_diag: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fixed-iteration LOBPCG: the fully traceable (jit/vmap-able)
+    variant of :func:`lobpcg` — no host convergence loop, no float()
+    synchronization, a static ``iters`` trip count.
+
+    This is the serve engine's batched inner eigensolver (DESIGN.md §8):
+    one bucket of padded graphs runs this under ``jax.vmap`` inside a
+    single compiled trace, warm-started from the previous embedding.
+    Exact-zero rows of ``X0`` stay exactly zero through every step
+    (matvec on isolated pad rows is 0, Householder reflectors never mix
+    exact-zero rows), which is what makes bucket padding sound for the
+    whole eigensolve, not just the SpMM.
+
+    Same Rayleigh-Ritz body as :func:`lobpcg`; the first iteration runs
+    without the P block (a zero block degrades the Ritz basis), the
+    remaining ``iters - 1`` run inside one ``lax.fori_loop``.
+    """
+    n, m = X0.shape
+    X = _ortho(X0)
+    pinv = None
+    if precond_diag is not None:
+        pinv = jnp.where(jnp.abs(precond_diag) > 1e-12,
+                         1.0 / precond_diag, 1.0)
+
+    def step(X, P, with_p: bool):
+        AX = matvec(X)
+        rho = jnp.sum(X * AX, axis=0)
+        R = AX - X * rho
+        if pinv is not None:
+            R = pinv[:, None] * R
+        blocks = [X, R] + ([P] if with_p else [])
+        S = _ortho(jnp.concatenate(blocks, axis=1))
+        AS = matvec(S)
+        T = S.T @ AS
+        T = 0.5 * (T + T.T)
+        evals, V = jnp.linalg.eigh(T)
+        return S @ V[:, :m], S[:, m:] @ V[m:, :m], evals[:m]
+
+    X, P, evals = step(X, jnp.zeros_like(X), False)
+
+    def body(_, carry):
+        X, P, _ = carry
+        return step(X, P, True)
+
+    X, P, evals = jax.lax.fori_loop(0, max(int(iters) - 1, 0), body,
+                                    (X, P, evals))
+    return evals[:k], X[:, :k]
+
+
 def smallest_eigvecs(W: SparseMatrix, k: int, normalized: bool = False,
                      seed: int = 0, max_iters: int = 200,
                      tol: float = 1e-6,

@@ -96,6 +96,14 @@ class PSCConfig:
     # the continuation on the coarsest graph, prolong + refine back up;
     # labels/U/metrics are returned on THIS graph either way.
     multilevel: object = None
+    # warm start (DESIGN.md §8): an (n, k) orthonormal-ish embedding
+    # from a previous solve.  When set, the pipeline skips stage 1 (the
+    # p=2 eigensolve) AND the p-continuation descent, entering the
+    # driver directly at the last ``warm_p_steps`` schedule values via
+    # ``solvers.warm_start`` — the repeat-tenant path the serve layer's
+    # warm cache feeds.  init_labels/init_rcut are not computed.
+    init_U: object = None
+    warm_p_steps: int = 1
 
     def __post_init__(self):
         # config-time applicability check: solver name resolves and the
@@ -138,6 +146,33 @@ class PSCResult:
     # multilevel runs only: per-level refinement records (level id, n,
     # nnz, p, fval, n_hvp) appended as the V-cycle walks up
     levels: Optional[list] = None
+    # per-driver telemetry: the SolverReport of every minimization the
+    # pipeline ran (continuation levels in order; for multilevel runs
+    # the coarsest full solve's reports followed by the walk-up
+    # refinements).  Optional for back-compat — the serve engine and
+    # benchmarks meter convergence from it without re-running.
+    reports: Optional[list] = None
+
+
+def stage_keys(seed: int):
+    """The pipeline's PRNG key discipline, shared with the serve engine
+    (which discretizes batched-solve embeddings OUTSIDE this function
+    but must land bit-identical labels): (init kmeans key, final kmeans
+    key) in the exact split order p_spectral_cluster consumes them."""
+    key = jax.random.PRNGKey(seed)
+    key, k_init = jax.random.split(key)
+    _, k_final = jax.random.split(key)
+    return k_init, k_final
+
+
+def discretize(U: jnp.ndarray, k: int, key, restarts: int = 8,
+               iters: int = 50):
+    """Stage 3: row-normalize like [4] (scale-invariant coordinates) and
+    kmeans++ the nonlinear eigenvectors.  Shared with the serve engine
+    so bucketed solves label exactly like the flat pipeline."""
+    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
+    labels, _ = km.kmeans(key, Xn, k, restarts=restarts, iters=iters)
+    return labels
 
 
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
@@ -149,35 +184,50 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
         ml = (cfg.multilevel if isinstance(cfg.multilevel, MultilevelConfig)
               else MultilevelConfig())
         return multilevel_cluster(W, cfg, ml)
-    inv = None
+    inv = perm = None
     if cfg.reorder != "none":
         from repro.graphs.reorder import reorder as _reorder
 
-        W, _, inv = _reorder(W, method=cfg.reorder)
+        W, perm, inv = _reorder(W, method=cfg.reorder)
     cfg.validate_backend(W)
-    key = jax.random.PRNGKey(cfg.seed)
+    k_init, k_final = stage_keys(cfg.seed)
 
-    # -- stage 1: linear (p=2) spectral start.  The stage-1 matvec runs
-    # under the reals ring, so forward the configured descriptor only
-    # when that backend can serve it (edge_pallas is hot-loop-only).
-    stage1_desc = grb_api.capable_desc(W, desc=cfg.descriptor(), k=cfg.k)
-    _, U = lobpcg.smallest_eigvecs(W, cfg.k, normalized=cfg.normalized_init,
-                                   seed=cfg.seed, desc=stage1_desc)
-    U = jnp.linalg.qr(U)[0]
-    key, sub = jax.random.split(key)
-    init_labels, _ = km.kmeans(sub, U, cfg.k, restarts=cfg.kmeans_restarts,
-                               iters=cfg.kmeans_iters)
-    init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
+    if cfg.init_U is not None:
+        # -- warm start (DESIGN.md §8): a previous embedding is a valid
+        # Grassmann feasible point — skip stage 1 and the continuation
+        # descent, enter the driver at the schedule tail.
+        U = jnp.asarray(cfg.init_U)
+        if U.shape != (W.n_rows, cfg.k):
+            raise ValueError(f"init_U shape {U.shape} != ({W.n_rows}, "
+                             f"{cfg.k})")
+        if perm is not None:
+            U = U[jnp.asarray(perm)]
+        U = jnp.linalg.qr(U)[0]
+        init_labels = None
+        init_rcut = float("nan")
+        U, p_path, fvals, hvps, reports = solvers.warm_start(
+            W, U, cfg, steps=cfg.warm_p_steps)
+    else:
+        # -- stage 1: linear (p=2) spectral start.  The stage-1 matvec
+        # runs under the reals ring, so forward the configured
+        # descriptor only when that backend can serve it (edge_pallas
+        # is hot-loop-only).
+        stage1_desc = grb_api.capable_desc(W, desc=cfg.descriptor(), k=cfg.k)
+        _, U = lobpcg.smallest_eigvecs(W, cfg.k,
+                                       normalized=cfg.normalized_init,
+                                       seed=cfg.seed, desc=stage1_desc)
+        U = jnp.linalg.qr(U)[0]
+        init_labels, _ = km.kmeans(k_init, U, cfg.k,
+                                   restarts=cfg.kmeans_restarts,
+                                   iters=cfg.kmeans_iters)
+        init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
 
-    # -- stage 2: p-continuation under the registered driver
-    U, p_path, fvals, hvps = solvers.p_continuation(W, U, cfg)
+        # -- stage 2: p-continuation under the registered driver
+        U, p_path, fvals, hvps, reports = solvers.p_continuation(W, U, cfg)
 
     # -- stage 3: kmeans discretization of the nonlinear eigenvectors
-    key, sub = jax.random.split(key)
-    # normalize rows like [4] (scale-invariant coordinates)
-    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
-    labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
-                          iters=cfg.kmeans_iters)
+    labels = discretize(U, cfg.k, k_final, restarts=cfg.kmeans_restarts,
+                        iters=cfg.kmeans_iters)
 
     # cut metrics are computed in whichever labeling W currently has —
     # they are permutation-invariant — then every row-indexed output is
@@ -185,17 +235,20 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     rcut = float(metrics.rcut(W, labels, cfg.k))
     ncut = float(metrics.ncut(W, labels, cfg.k))
     labels = np.asarray(labels)
-    init_labels = np.asarray(init_labels)
+    if init_labels is not None:
+        init_labels = np.asarray(init_labels)
     if inv is not None:
         labels = labels[inv]
-        init_labels = init_labels[inv]
+        if init_labels is not None:
+            init_labels = init_labels[inv]
         U = U[jnp.asarray(inv)]
 
     return PSCResult(
         labels=labels, U=U,
         rcut=rcut, ncut=ncut,
         p_path=p_path, fvals=fvals, hvp_counts=hvps,
-        init_labels=init_labels, init_rcut=init_rcut)
+        init_labels=init_labels, init_rcut=init_rcut,
+        reports=reports)
 
 
 def spectral_cluster(W: SparseMatrix, k: int, seed: int = 0,

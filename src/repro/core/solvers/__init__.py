@@ -21,6 +21,7 @@ from repro.core.solvers.registry import (
     registered_solvers,
     resolve_solver,
     validate_config,
+    warm_start,
 )
 from repro.core.solvers import newton, scf, inverse_power  # register drivers
 
@@ -29,5 +30,5 @@ __all__ = [
     "SolverUnavailableError", "backend_bakes_ring_params", "memoized",
     "mark_trace", "minimize_at_p", "p_continuation", "p_schedule",
     "register_solver", "registered_solvers", "resolve_solver",
-    "validate_config", "newton", "scf", "inverse_power",
+    "validate_config", "warm_start", "newton", "scf", "inverse_power",
 ]

@@ -181,22 +181,66 @@ def minimize_at_p(W, U0, p, cfg) -> SolverReport:
 def p_continuation(W, U0, cfg):
     """Run the whole p schedule, warm-starting each level from the last.
 
-    Returns (U, p_path, fvals, applies) — the per-level records the
-    pipeline stores in PSCResult.  Drivers are resolved once; every
-    level replays the driver's memoized jitted step (one trace per
-    execution signature, not per level — see ``memoized``)."""
+    Returns (U, p_path, fvals, applies, reports) — the per-level records
+    the pipeline stores in PSCResult (``reports`` is the full
+    SolverReport per level, threaded into ``PSCResult.reports`` so the
+    serve engine and benchmarks can meter convergence without re-running
+    the solve).  Drivers are resolved once; every level replays the
+    driver's memoized jitted step (one trace per execution signature,
+    not per level — see ``memoized``)."""
     solver = resolve_solver(cfg.solver)
     U = U0
     p_path: List[float] = []
     fvals: List[float] = []
     applies: List[int] = []
+    reports: List[SolverReport] = []
     for p in p_schedule(cfg):
         rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
         U = rep.U
         p_path.append(p)
         fvals.append(float(rep.fval))
         applies.append(int(rep.n_apply))
-    return U, p_path, fvals, applies
+        reports.append(rep)
+    return U, p_path, fvals, applies, reports
+
+
+def warm_start(W, U0, cfg, p_final: Optional[float] = None,
+               steps: int = 1):
+    """Warm entry point of the driver contract (DESIGN.md §8): enter the
+    continuation at its END instead of replaying the whole p schedule.
+
+    ``U0`` is a previous solve's embedding (the Grassmann formulation
+    makes any orthonormal (n, k) a feasible restart point); the driver
+    runs only the last ``steps`` schedule values, ending at ``p_final``
+    (default ``cfg.p_target``).  This is the repeat-tenant path the
+    serve layer's warm cache feeds: a good U converges in a few sweeps
+    of SCF or a couple of Newton steps, skipping the p=2 eigensolve and
+    the descent from p=2 entirely.
+
+    Returns the same (U, p_path, fvals, applies, reports) tuple as
+    ``p_continuation``."""
+    solver = resolve_solver(cfg.solver)
+    p_end = cfg.p_target if p_final is None else float(p_final)
+    if not solver.supports_p(p_end):
+        raise ValueError(
+            f"warm start at p={p_end} outside solver {solver.name!r} "
+            f"supported range {solver.p_range_str()}")
+    tail = [p for p in p_schedule(cfg) if p >= p_end][-max(int(steps), 1):]
+    if not tail or tail[-1] != p_end:
+        tail = (tail + [p_end])[-max(int(steps), 1):]
+    U = U0
+    p_path: List[float] = []
+    fvals: List[float] = []
+    applies: List[int] = []
+    reports: List[SolverReport] = []
+    for p in tail:
+        rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+        U = rep.U
+        p_path.append(p)
+        fvals.append(float(rep.fval))
+        applies.append(int(rep.n_apply))
+        reports.append(rep)
+    return U, p_path, fvals, applies, reports
 
 
 # --- trace-memo scaffolding (hoisted from core.psc, PR-3) ------------------

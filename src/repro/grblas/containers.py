@@ -39,7 +39,8 @@ every run shape is known at trace time.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+import hashlib
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 import jax
@@ -49,6 +50,28 @@ import jax.numpy as jnp
 # more than this multiple of nnz, from_coo builds the SELL-C-σ layout as
 # well and backend auto-selection prefers it over ELL (grblas.backends).
 SELLCS_AUTO_THRESHOLD = 4.0
+
+
+class GraphFingerprint(NamedTuple):
+    """Identity of a weighted graph for the serve-layer warm cache
+    (DESIGN.md §8): shape, a digest of the sparsity pattern, and a
+    digest of the *quantized* weights.  Two graphs with the same pattern
+    but different weights share ``pattern_key`` (warm-startable from the
+    cached embedding via ``with_vals``) while their full ``key`` differs
+    (the cached labels are NOT valid for them)."""
+
+    n: int
+    nnz: int
+    pattern: str        # blake2b digest of (n, n_cols, rows, cols)
+    weights: str        # blake2b digest of round(vals / weight_quant)
+
+    @property
+    def key(self) -> tuple:
+        return (self.n, self.nnz, self.pattern, self.weights)
+
+    @property
+    def pattern_key(self) -> tuple:
+        return (self.n, self.nnz, self.pattern)
 
 
 def _row_layout(rows, n_rows: int, nnz: int):
@@ -367,6 +390,55 @@ class SparseMatrix:
                 "traced — run host-side plan construction outside jit")
         return (np.asarray(self.rows), np.asarray(self.cols),
                 np.asarray(self.vals))
+
+    def fingerprint(self, weight_quant: float = 1e-6) -> GraphFingerprint:
+        """Graph identity for the serve-layer warm cache: (n, nnz,
+        pattern digest, quantized-weight digest).  The pattern digest
+        hashes the sorted COO index arrays (from_coo sorts, so equal
+        patterns hash equal regardless of input order); weights are
+        quantized to ``weight_quant`` before hashing so bit-level float
+        noise does not defeat repeat-tenant detection, while any weight
+        change ≥ the quantum lands a distinct fingerprint (pinned by
+        tests/test_warm_cache.py).  Host-side: raises on traced
+        containers, like every other plan-construction input."""
+        rows, cols, vals = self.host_coo()
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.int64([self.n_rows, self.n_cols]).tobytes())
+        h.update(np.ascontiguousarray(rows, np.int32).tobytes())
+        h.update(np.ascontiguousarray(cols, np.int32).tobytes())
+        pattern = h.hexdigest()
+        hw = hashlib.blake2b(digest_size=16)
+        q = np.round(np.asarray(vals, np.float64) / weight_quant)
+        hw.update(q.astype(np.int64).tobytes())
+        return GraphFingerprint(n=self.n_rows, nnz=self.nnz,
+                                pattern=pattern, weights=hw.hexdigest())
+
+    def padded_coo(self, n_pad: int, nnz_pad: int):
+        """Bucket padding for the serve layer: the COO triple padded to
+        static dims (n_pad rows, nnz_pad stored entries) so graphs of
+        different sizes share one compiled batched solve (DESIGN.md §8).
+
+        Pad entries are (0, 0, 0.0) — they self-reference an existing
+        row with weight zero, so every segment fold adds exact zeros
+        (the pad-soundness contract the dist backend established); pad
+        ROWS [n_rows, n_pad) carry no entries at all, so they are
+        isolated vertices the batched solver masks out.  Returns host
+        numpy (rows, cols, vals) ready to stack across a batch."""
+        if self.n_rows != self.n_cols:
+            raise ValueError("bucket padding is defined for square graphs, "
+                             f"got ({self.n_rows}, {self.n_cols})")
+        if n_pad < self.n_rows or nnz_pad < self.nnz:
+            raise ValueError(
+                f"bucket ({n_pad}, {nnz_pad}) smaller than graph "
+                f"({self.n_rows}, {self.nnz})")
+        rows, cols, vals = self.host_coo()
+        pad = nnz_pad - self.nnz
+        return (np.concatenate([np.asarray(rows, np.int32),
+                                np.zeros(pad, np.int32)]),
+                np.concatenate([np.asarray(cols, np.int32),
+                                np.zeros(pad, np.int32)]),
+                np.concatenate([np.asarray(vals),
+                                np.zeros(pad, np.asarray(vals).dtype)]))
 
     def to_dense(self) -> jnp.ndarray:
         d = jnp.zeros((self.n_rows, self.n_cols), self.vals.dtype)

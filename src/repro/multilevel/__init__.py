@@ -22,12 +22,14 @@ from repro.multilevel.coarsen import (
     build_hierarchy,
     coarsen_graph,
     heavy_edge_matching,
+    patch_hierarchy,
     prolongator_from_aggregates,
 )
-from repro.multilevel.vcycle import MultilevelConfig, multilevel_cluster
+from repro.multilevel.vcycle import (MultilevelConfig, multilevel_cluster,
+                                     refine_cluster)
 
 __all__ = [
     "CoarsenInfo", "Hierarchy", "Level", "build_hierarchy", "coarsen_graph",
-    "heavy_edge_matching", "prolongator_from_aggregates",
-    "MultilevelConfig", "multilevel_cluster",
+    "heavy_edge_matching", "patch_hierarchy", "prolongator_from_aggregates",
+    "MultilevelConfig", "multilevel_cluster", "refine_cluster",
 ]

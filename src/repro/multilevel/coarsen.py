@@ -267,6 +267,131 @@ def auto_sparsify_cap(W: SparseMatrix) -> int:
     return max(int(np.ceil(mean_deg)), 12)
 
 
+def patch_hierarchy(hier: Hierarchy, W_new: SparseMatrix,
+                    touched: np.ndarray, rounds: int = 8,
+                    max_agg: int = 4,
+                    layout_kwargs: Optional[dict] = None,
+                    sparsify="auto") -> Tuple[Hierarchy, List[dict]]:
+    """Rebuild a hierarchy for an *edited* graph by reusing the old
+    matching everywhere the edit cannot have reached (DESIGN.md §8).
+
+    ``touched`` lists the finest-level vertices incident to pattern
+    deltas (added or removed edges).  At every level only vertices
+    within graph distance 1 of a touched vertex are re-matched; every
+    aggregate containing none of them keeps its old membership — its
+    prolongator rows are bit-identical up to the id compaction.  The
+    Galerkin products Pᵀ W P are recomputed at every level (the edge
+    *weights* changed, so they must be), but those are linear-time
+    spgemms; what this function avoids re-running is the multi-round
+    handshake matching, which is the host-side cost of
+    ``build_hierarchy`` — and, more importantly downstream, a patched
+    hierarchy keeps aggregate ids stable on the untouched region so the
+    cached embedding restricts onto it coherently.
+
+    New aggregates born from a local re-match are marked touched at the
+    next level up (their coarse pattern is new), so the dirty set
+    contracts with the graph instead of spreading.
+
+    Returns (hierarchy, records): one record per level with the dirty /
+    re-matched counts, for ServeStats and the churn benchmark.
+    """
+    if sparsify == "auto":
+        cap = auto_sparsify_cap(W_new)
+    elif sparsify is None or sparsify is False:
+        cap = None
+    else:
+        cap = int(sparsify)
+        if cap < 1:
+            raise ValueError(f"sparsify cap must be >= 1, got {cap}")
+    if W_new.n_rows != hier.levels[0].W.n_rows:
+        raise ValueError("patch_hierarchy: vertex count changed; rebuild "
+                         "the hierarchy instead")
+    W = W_new
+    vol = W.row_sums()
+    counts = jnp.ones(W.n_rows, W.vals.dtype)
+    levels = [Level(W=W, vol=vol, counts=counts)]
+    prolongators: List[SparseMatrix] = []
+    infos: List[CoarsenInfo] = []
+    records: List[dict] = []
+    kw = dict(layout_kwargs or {})
+
+    touched = np.unique(np.asarray(touched, np.int64))
+    new2old = np.arange(W.n_rows, dtype=np.int64)   # level-l new -> old id
+    for info in hier.infos:
+        n = W.n_rows
+        rows = np.asarray(W.rows, np.int64)
+        cols = np.asarray(W.cols, np.int64)
+        dirty = np.zeros(n, bool)
+        dirty[touched] = True
+        dirty[cols[dirty[rows]]] = True             # distance-1 closure
+        dirty |= new2old < 0                        # freshly born vertices
+
+        # dissolve every old aggregate with a dirty (or vanished) member
+        old_agg = info.agg
+        bad = np.zeros(info.n_coarse, bool)
+        present = np.zeros(info.n_fine, bool)
+        present[new2old[new2old >= 0]] = True
+        bad[old_agg[~present]] = True
+        bad[old_agg[new2old[dirty & (new2old >= 0)]]] = True
+        has_old = new2old >= 0
+        dirty[has_old] |= bad[old_agg[new2old[has_old]]]
+
+        # clean vertices keep their old aggregate (compacted ids first)
+        kept_old = np.unique(old_agg[new2old[~dirty]]) if (~dirty).any() \
+            else np.empty(0, np.int64)
+        remap = np.full(info.n_coarse, -1, np.int64)
+        remap[kept_old] = np.arange(len(kept_old))
+        agg = np.empty(n, np.int64)
+        agg[~dirty] = remap[old_agg[new2old[~dirty]]]
+
+        # dirty vertices re-match on their induced subgraph
+        d_ids = np.nonzero(dirty)[0]
+        n_new_aggs = 0
+        if len(d_ids):
+            sub_id = np.full(n, -1, np.int64)
+            sub_id[d_ids] = np.arange(len(d_ids))
+            both = dirty[rows] & dirty[cols]
+            Wsub = SparseMatrix.from_coo(
+                sub_id[rows[both]], sub_id[cols[both]],
+                np.asarray(W.vals)[both], (len(d_ids), len(d_ids)),
+                dtype=W.vals.dtype)
+            agg_sub = heavy_edge_matching(Wsub, rounds=rounds,
+                                          max_agg=max_agg)
+            n_new_aggs = int(agg_sub.max()) + 1 if len(agg_sub) else 0
+            agg[d_ids] = len(kept_old) + agg_sub
+        n_coarse = len(kept_old) + n_new_aggs
+
+        P = prolongator_from_aggregates(agg, n_coarse, dtype=W.vals.dtype)
+        WP = api.mxm(W, P)
+        Wc = api.mxm(P, WP, desc=_T)
+        r2, c2, v2 = (np.asarray(Wc.rows, np.int64),
+                      np.asarray(Wc.cols, np.int64), np.asarray(Wc.vals))
+        if cap is not None:
+            r2, c2, v2 = _sparsify_rowcap(r2, c2, v2, n_coarse, cap)
+        kw2 = dict(kw)
+        kw2.setdefault("dtype", W.vals.dtype)
+        Wc = SparseMatrix.from_coo(r2, c2, v2, (n_coarse, n_coarse), **kw2)
+        cur = levels[-1]
+        vol_c = api.mxm(P, cur.vol, desc=_T)
+        cnt_c = api.mxm(P, cur.counts, desc=_T)
+        levels.append(Level(W=Wc, vol=vol_c, counts=cnt_c))
+        prolongators.append(P)
+        infos.append(CoarsenInfo(n_fine=n, n_coarse=n_coarse, agg=agg))
+        records.append({"n": n, "n_coarse": n_coarse,
+                        "n_dirty": int(dirty.sum()),
+                        "n_rematched": len(d_ids),
+                        "n_kept_aggregates": len(kept_old)})
+
+        # next level: kept aggregates correspond to old coarse ids,
+        # re-matched ones are new pattern -> touched above
+        new2old = np.concatenate(
+            [kept_old, np.full(n_new_aggs, -1, np.int64)])
+        touched = np.arange(len(kept_old), n_coarse, dtype=np.int64)
+        W = Wc
+    return Hierarchy(levels=levels, prolongators=prolongators,
+                     infos=infos), records
+
+
 def build_hierarchy(W: SparseMatrix, coarse_size: int = 2048,
                     max_levels: int = 12, min_reduction: float = 0.9,
                     rounds: int = 8,

@@ -31,8 +31,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.grblas import api
+from repro.grblas.api import Descriptor
 from repro.grblas.containers import SparseMatrix
 from repro.multilevel.coarsen import build_hierarchy
+
+_T = Descriptor(transpose=True)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,13 +103,79 @@ def _layout_kwargs(cfg) -> Optional[dict]:
     return None
 
 
+def _refine_cfg(cfg, ml: MultilevelConfig):
+    return dataclasses.replace(
+        cfg, multilevel=None, newton_iters=ml.refine_newton_iters,
+        tcg_iters=ml.refine_tcg_iters, reorder="none",
+        solver=ml.refine_solver or cfg.solver)
+
+
+def _walk_up(hier, U, cfg, ml: MultilevelConfig, rec: dict):
+    """Shared V-cycle ascent: from the coarsest-level iterate ``U``,
+    prolong through every level and — on levels with
+    n ≥ refine_top_frac × n_finest — re-orthonormalize (Grassmann
+    retraction) and re-run the tail of the p schedule.  Deep levels are
+    prolonged straight through: their refinement FLOPs are negligible
+    but each distinct level shape pays a full jit trace+compile — the
+    measured tax dwarfed the compute.
+
+    ``rec`` accumulates p_path / fvals / hvps / reports / levels lists
+    in place; returns the finest-level orthonormal U."""
+    from repro.core import psc as _psc, solvers
+
+    tail = _psc.p_schedule(cfg)[-max(int(ml.refine_p_steps), 1):]
+    refine_cfg = _refine_cfg(cfg, ml)
+    n_fine = hier.levels[0].W.n_rows
+    for lev in range(hier.n_levels - 2, -1, -1):
+        P = hier.prolongators[lev]
+        Wl = hier.levels[lev].W
+        U = api.mxm(P, U)                       # prolong: (n_lev, k)
+        if Wl.n_rows < ml.refine_top_frac * n_fine:
+            continue
+        refine_cfg.validate_backend(Wl)
+        U = jnp.linalg.qr(U)[0]                 # Grassmann retraction
+        for p in tail:
+            res = solvers.minimize_at_p(Wl, U, p, refine_cfg)
+            U = res.U
+            rec["p_path"].append(p)
+            rec["fvals"].append(float(res.fval))
+            rec["hvps"].append(int(res.n_apply))
+            rec["reports"].append(res)
+            rec["levels"].append({
+                "level": lev, "n_levels": hier.n_levels,
+                "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
+                "fval": float(res.fval), "n_hvp": int(res.n_apply),
+                "iters": int(res.iters), "solver": refine_cfg.solver})
+    return jnp.linalg.qr(U)[0]
+
+
+def _finalize(W: SparseMatrix, U, cfg, rec: dict, init_labels, init_rcut):
+    """Finest-level discretization + metrics (identical to the flat
+    solver's stage 3: metrics unchanged, permutation-free)."""
+    from repro.core import kmeans as km, metrics
+    from repro.core import psc as _psc
+
+    key = jax.random.PRNGKey(cfg.seed)
+    _, sub = jax.random.split(key)
+    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
+    labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
+                          iters=cfg.kmeans_iters)
+    rcut = float(metrics.rcut(W, labels, cfg.k))
+    ncut = float(metrics.ncut(W, labels, cfg.k))
+    return _psc.PSCResult(
+        labels=np.asarray(labels), U=U, rcut=rcut, ncut=ncut,
+        p_path=rec["p_path"], fvals=rec["fvals"], hvp_counts=rec["hvps"],
+        init_labels=init_labels, init_rcut=init_rcut,
+        levels=rec["levels"], reports=rec["reports"])
+
+
 def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
                        ) -> "Any":
     """Run the V-cycle under flat-config ``cfg`` (a PSCConfig whose
     ``multilevel`` field routed here).  Returns a PSCResult on the fine
     graph — same fields, same metrics, plus per-level refinement
     records in ``result.levels``."""
-    from repro.core import kmeans as km, metrics, solvers
+    from repro.core import metrics
     from repro.core import psc as _psc
 
     hier = build_hierarchy(W, coarse_size=ml.coarse_size,
@@ -127,60 +196,69 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
     # -- coarsest level: the whole flat pipeline (p=2 LOBPCG init + full
     # p-continuation).  Its labels seed init_labels on the fine graph.
     res_c = _psc.p_spectral_cluster(hier.coarsest.W, flat_cfg)
-    U = res_c.U
-    p_path = list(res_c.p_path)
-    fvals = list(res_c.fvals)
-    hvps = list(res_c.hvp_counts)
-    level_records: List[dict] = []
+    rec = {"p_path": list(res_c.p_path), "fvals": list(res_c.fvals),
+           "hvps": list(res_c.hvp_counts),
+           "reports": list(res_c.reports or []), "levels": []}
 
-    schedule = _psc.p_schedule(cfg)
-    tail = schedule[-max(int(ml.refine_p_steps), 1):]
-    refine_cfg = dataclasses.replace(
-        cfg, multilevel=None, newton_iters=ml.refine_newton_iters,
-        tcg_iters=ml.refine_tcg_iters, reorder="none",
-        solver=ml.refine_solver or cfg.solver)
-
-    # -- walk up: prolong -> (on the top levels) re-orthonormalize +
-    # refine.  Deep levels are prolonged straight through: their
-    # refinement FLOPs are negligible but each distinct level shape pays
-    # a full jit trace+compile — the measured tax dwarfed the compute.
-    n_fine = W.n_rows
-    for lev in range(hier.n_levels - 2, -1, -1):
-        P = hier.prolongators[lev]
-        Wl = hier.levels[lev].W
-        U = api.mxm(P, U)                       # prolong: (n_lev, k)
-        if Wl.n_rows < ml.refine_top_frac * n_fine:
-            continue
-        refine_cfg.validate_backend(Wl)
-        U = jnp.linalg.qr(U)[0]                 # Grassmann retraction
-        for p in tail:
-            res = solvers.minimize_at_p(Wl, U, p, refine_cfg)
-            U = res.U
-            p_path.append(p)
-            fvals.append(float(res.fval))
-            hvps.append(int(res.n_apply))
-            level_records.append({
-                "level": lev, "n_levels": hier.n_levels,
-                "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
-                "fval": float(res.fval), "n_hvp": int(res.n_apply),
-                "iters": int(res.iters), "solver": refine_cfg.solver})
-    U = jnp.linalg.qr(U)[0]
-
-    # -- finest-level discretization + metrics (identical to the flat
-    # solver's stage 3: metrics unchanged, permutation-free)
-    key = jax.random.PRNGKey(cfg.seed)
-    _, sub = jax.random.split(key)
-    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
-    labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
-                          iters=cfg.kmeans_iters)
-    rcut = float(metrics.rcut(W, labels, cfg.k))
-    ncut = float(metrics.ncut(W, labels, cfg.k))
+    U = _walk_up(hier, res_c.U, cfg, ml, rec)
 
     init_labels = hier.prolong_labels(np.asarray(res_c.labels))
     init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
+    return _finalize(W, U, cfg, rec, init_labels, init_rcut)
 
-    return _psc.PSCResult(
-        labels=np.asarray(labels), U=U, rcut=rcut, ncut=ncut,
-        p_path=p_path, fvals=fvals, hvp_counts=hvps,
-        init_labels=init_labels, init_rcut=init_rcut,
-        levels=level_records)
+
+def refine_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig,
+                   hier: "Any", U0) -> "Any":
+    """Refine-only V-cycle (DESIGN.md §8): re-cluster ``W`` starting
+    from a previous solve's finest-level embedding ``U0`` instead of the
+    coarsest-level flat pipeline.
+
+    This is the incremental re-clustering path under edge churn: the
+    serve layer patches the cached hierarchy against the edited graph
+    (``coarsen.patch_hierarchy``), restricts the cached U down to the
+    coarsest level (Pᵀ U — aggregate sums, one ``api.mxm`` per level),
+    warm-enters the coarse driver at the END of the p schedule, and
+    walks back up with the usual prolong + refine ascent.  The p=2
+    LOBPCG init and the descent from p=2 are skipped entirely — the
+    cached subspace already encodes the global structure, the V-cycle
+    only has to relax it against the edited edges.
+
+    ``hier`` must be a hierarchy of ``W`` itself (patched or freshly
+    built); ``U0`` is (n, k) on the finest level.  Returns a PSCResult
+    with ``init_labels=None`` (there is no linear init on this path).
+    """
+    from repro.core import psc as _psc, solvers
+
+    U = jnp.asarray(U0)
+    if U.shape != (W.n_rows, cfg.k):
+        raise ValueError(
+            f"refine_cluster: U0 shape {U.shape} != ({W.n_rows}, {cfg.k})")
+    if hier.levels[0].W.n_rows != W.n_rows:
+        raise ValueError("refine_cluster: hierarchy does not match W")
+    rec = {"p_path": [], "fvals": [], "hvps": [], "reports": [],
+           "levels": []}
+
+    # -- restrict the cached embedding to the coarsest level: Pᵀ U is
+    # the aggregate-sum restriction (partition-of-unity columns), the
+    # subspace analogue of prolong_labels' constant-on-aggregates map.
+    for P in hier.prolongators:
+        U = api.mxm(P, U, desc=_T)
+    U = jnp.linalg.qr(U)[0]
+
+    # -- coarsest level: warm entry at the end of the p schedule under
+    # the coarse driver (no LOBPCG, no continuation descent)
+    coarse_cfg = dataclasses.replace(
+        cfg, multilevel=None, reorder="none",
+        solver=ml.coarse_solver or cfg.solver)
+    coarse_cfg.validate_backend(hier.coarsest.W)
+    U, p_path, fvals, hvps, reports = solvers.warm_start(
+        hier.coarsest.W, U, coarse_cfg,
+        steps=max(int(ml.refine_p_steps), 1))
+    rec["p_path"] += p_path
+    rec["fvals"] += fvals
+    rec["hvps"] += hvps
+    rec["reports"] += reports
+
+    U = _walk_up(hier, U, cfg, ml, rec)
+    return _finalize(W, U, cfg, rec, init_labels=None,
+                     init_rcut=float("nan"))

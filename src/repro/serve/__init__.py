@@ -1,3 +1,19 @@
+"""Serving layer: the LLM decode engine (``serve.engine``) and the
+clustering-as-a-service PSC engine built on the same one-trace,
+static-shape discipline (``serve.psc_engine``, DESIGN.md §8)."""
 from repro.serve.engine import ServeEngine, GenerationConfig
+from repro.serve.bucketing import (BucketSpec, assemble_batch, bucket_for,
+                                   next_pow2)
+from repro.serve.churn import EdgeDelta, apply_edge_delta, \
+    incremental_recluster
+from repro.serve.psc_engine import (ClusterServeEngine, EngineStats,
+                                    ServeResult, ServeStats)
+from repro.serve.warm_cache import CacheEntry, WarmCache
 
-__all__ = ["ServeEngine", "GenerationConfig"]
+__all__ = [
+    "ServeEngine", "GenerationConfig",
+    "BucketSpec", "assemble_batch", "bucket_for", "next_pow2",
+    "EdgeDelta", "apply_edge_delta", "incremental_recluster",
+    "ClusterServeEngine", "EngineStats", "ServeResult", "ServeStats",
+    "CacheEntry", "WarmCache",
+]

@@ -1,0 +1,103 @@
+"""Shape-bucketed batching for the clustering serve engine (DESIGN.md §8).
+
+jit compiles one executable per input *shape*, so a stream of
+arbitrarily-sized graphs would retrace per request — the exact failure
+mode the LLM serve engine avoids with its static-shape decode step.
+The clustering analogue: quantize every request onto a small lattice of
+(n, nnz, k) *buckets* (powers of two, floored), pad each graph's COO
+triple up to its bucket, and vmap the whole SCF/Newton continuation
+across a bucket so each bucket compiles exactly one trace no matter how
+many requests it serves.
+
+Padding is sound by the PR-5 contract: pad entries are (0, 0, 0.0) —
+they self-reference an existing row with zero weight, so every segment
+fold and every edge semiring contribution they generate is an exact
+float zero (adding 0.0 to a float sum is bitwise exact).  Pad *rows*
+(vertices n..n_b) are isolated: no edge touches them, embeddings keep
+exact-zero rows through QR and Newton (reflector entries at zero rows
+are 0), and the dense-eigh init pushes their Laplacian null-space to
+the top of the spectrum with a large pad-diagonal shift so the
+smallest-k selection never sees it.
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Sequence, Tuple
+
+import numpy as np
+
+from repro.grblas.containers import SparseMatrix
+
+
+def next_pow2(x: int, floor: int = 1) -> int:
+    """Smallest power of two >= max(x, floor)."""
+    v = max(int(x), int(floor), 1)
+    return 1 << (v - 1).bit_length()
+
+
+class BucketSpec(NamedTuple):
+    """One compiled-trace signature of the batched solve: every graph
+    padded to (n, nnz) with ``k`` clusters and ``mode`` ("cold" = full
+    continuation from the p=2 init, "warm" = schedule tail from a cached
+    embedding — separate trace signatures, separate lanes)."""
+
+    n: int
+    nnz: int
+    k: int
+    mode: str
+
+    @property
+    def key(self) -> tuple:
+        return ("serve", self.mode, self.n, self.nnz, self.k)
+
+
+def bucket_for(W: SparseMatrix, k: int, mode: str, min_n: int = 64,
+               min_nnz: int = 128) -> BucketSpec:
+    """The bucket a graph pads into: power-of-two (n, nnz) with floors,
+    so the trace lattice stays logarithmic in graph size."""
+    if W.n_rows != W.n_cols:
+        raise ValueError("serve buckets hold square (graph) matrices")
+    return BucketSpec(n=next_pow2(W.n_rows, min_n),
+                      nnz=next_pow2(W.nnz, min_nnz), k=int(k), mode=mode)
+
+
+class BucketBatch(NamedTuple):
+    """Stacked padded COO triples for one bucket solve: everything the
+    jitted batched step consumes, all static-shaped for the spec."""
+
+    rows: np.ndarray      # (B, nnz_b) int32
+    cols: np.ndarray      # (B, nnz_b) int32
+    vals: np.ndarray      # (B, nnz_b) float
+    mask: np.ndarray      # (B, n_b) 1.0 on real vertices, 0.0 on pads
+    n_real: Tuple[int, ...]
+
+
+def assemble_batch(graphs: Sequence[SparseMatrix], spec: BucketSpec
+                   ) -> BucketBatch:
+    """Pad every graph to the bucket and stack along a batch axis."""
+    rows: List[np.ndarray] = []
+    cols: List[np.ndarray] = []
+    vals: List[np.ndarray] = []
+    mask = np.zeros((len(graphs), spec.n), np.float32)
+    for b, W in enumerate(graphs):
+        r, c, v = W.padded_coo(spec.n, spec.nnz)
+        rows.append(r)
+        cols.append(c)
+        vals.append(v)
+        mask[b, :W.n_rows] = 1.0
+    return BucketBatch(rows=np.stack(rows), cols=np.stack(cols),
+                       vals=np.stack(vals).astype(np.float32), mask=mask,
+                       n_real=tuple(W.n_rows for W in graphs))
+
+
+def pad_embeddings(Us: Sequence[np.ndarray], spec: BucketSpec) -> np.ndarray:
+    """Stack cached (n_i, k) embeddings into the bucket's (B, n_b, k)
+    warm-start tensor, zero on pad rows (the exact-zero invariant the
+    batched solve preserves)."""
+    out = np.zeros((len(Us), spec.n, spec.k), np.float32)
+    for b, U in enumerate(Us):
+        U = np.asarray(U, np.float32)
+        if U.shape[1] != spec.k or U.shape[0] > spec.n:
+            raise ValueError(f"embedding {U.shape} does not fit bucket "
+                             f"{(spec.n, spec.k)}")
+        out[b, :U.shape[0]] = U
+    return out

@@ -1,0 +1,522 @@
+"""Clustering-as-a-service: the batched, warm-started PSC serve engine
+(DESIGN.md §8).
+
+``serve/engine.py`` serves an LLM by compiling ONE static-shape decode
+step and reusing it for every token of every request.  This module is
+the clustering analogue for a stream of graph requests:
+
+  * **shape-bucketed batching** — requests pad onto a power-of-two
+    (n, nnz, k) bucket lattice (``serve.bucketing``) and the whole
+    SCF/Newton p-continuation runs ``jax.vmap``-ed across a bucket, so
+    each bucket compiles exactly one trace no matter how many requests
+    it serves.  The per-bucket jitted solve is memoized through the
+    solver registry's trace scaffolding (``registry.memoized`` /
+    ``mark_trace``), so retraces are observable the same way the Newton
+    driver's are.
+  * **warm-start cache** — an LRU on graph fingerprints
+    (``serve.warm_cache``).  A hit skips the p=2 eigensolve and the
+    continuation descent entirely: the cached embedding re-enters the
+    registry at the END of the p schedule (``solvers.warm_start`` — the
+    nonlinear lift of ``lobpcg.smallest_eigvecs``' X0 substrate).
+  * **incremental re-clustering** — ``update()`` takes an
+    :class:`~repro.serve.churn.EdgeDelta` against a previously served
+    graph: weight-only deltas ride ``with_vals`` + a warm solve;
+    pattern deltas patch the cached multilevel hierarchy and run a
+    refine-only V-cycle (``serve.churn``).
+  * **admission + metrics** — a request queue with per-bucket batch
+    assembly under a max-wait deadline, per-request :class:`ServeStats`
+    (queue time, solve time, cache tier, trace reuse) and engine-level
+    throughput counters.
+
+Graphs larger than the bucket lattice (``max_bucket_n``) take the
+*solo* lane: the flat (or multilevel) pipeline per request — the same
+warm-start and churn machinery applies, only unbatched.
+
+Determinism contract: a bucketed solve discretizes with the flat
+pipeline's exact stage-3 key (``psc.stage_keys`` / ``psc.discretize``)
+and computes RCut on the caller's ORIGINAL graph, so a padded, batched
+request returns the same labels as ``p_spectral_cluster`` on the bare
+graph (pinned by tests/test_psc_serve.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import metrics, plap
+from repro.core import psc as _psc
+from repro.core.grassmann import rtr_minimize
+from repro.core.psc import PSCConfig
+from repro.core.solvers import registry
+from repro.grblas.api import Descriptor
+from repro.grblas.containers import GraphFingerprint, SparseMatrix
+from repro.serve.bucketing import (BucketBatch, BucketSpec, assemble_batch,
+                                   bucket_for, pad_embeddings)
+from repro.serve.churn import EdgeDelta, apply_edge_delta, \
+    incremental_recluster
+from repro.serve.warm_cache import CacheEntry, WarmCache
+
+# Spectral shift applied to pad-vertex diagonals in the batched dense
+# eigensolves: isolated pad rows contribute extra Laplacian null-space,
+# and this pushes it far above any graph eigenvalue so the smallest-k
+# Ritz selection only ever sees the real spectrum.
+_PAD_SHIFT = 1.0e6
+
+_COO = Descriptor(backend="coo")
+
+
+# --------------------------------------------------------------- stats types
+
+@dataclasses.dataclass
+class ServeStats:
+    """Per-request accounting, returned alongside every result."""
+
+    req_id: int
+    n: int
+    nnz: int
+    k: int
+    lane: str                    # "bucket" | "solo"
+    mode: str                    # "cold" | "warm" | "churn"
+    cache_tier: Optional[str]    # None | "exact" | "pattern"
+    bucket: Optional[tuple]      # BucketSpec key (bucket lane only)
+    batch_size: int
+    queue_s: float
+    solve_s: float
+    trace_new: bool              # this request's batch compiled a new trace
+    p_final: float
+
+
+@dataclasses.dataclass
+class ServeResult:
+    req_id: int
+    labels: np.ndarray
+    U: np.ndarray
+    rcut: float
+    ncut: float
+    stats: ServeStats
+
+
+@dataclasses.dataclass
+class _Pending:
+    req_id: int
+    W: SparseMatrix
+    k: int
+    fp: GraphFingerprint
+    spec: Optional[BucketSpec]
+    mode: str                       # "cold" | "warm"
+    cache_tier: Optional[str]
+    warm_U: Optional[np.ndarray]
+    arrival: float
+    churn: bool = False
+    touched: Optional[np.ndarray] = None
+    pattern_changed: bool = False
+    hierarchy: object = None
+
+
+# ------------------------------------------------------ batched solver build
+
+def _dense_smallest(L: jnp.ndarray, mask: jnp.ndarray, k: int):
+    """Smallest-k eigenvectors of a padded dense operator: pad diagonals
+    get the ``_PAD_SHIFT`` so the isolated-vertex null-space sorts above
+    every real eigenvalue; pad rows of the result are re-zeroed (eigh
+    leaves only FP dust there) to restore the exact-zero invariant."""
+    L = L + jnp.diag((1.0 - mask) * _PAD_SHIFT)
+    _, evecs = jnp.linalg.eigh(L)
+    return evecs[:, :k] * mask[:, None]
+
+
+def _batched_init(W: SparseMatrix, mask: jnp.ndarray, k: int, cfg):
+    """Stage 1 of the flat pipeline, batched: the dense-eigh path of
+    ``lobpcg.smallest_eigvecs`` (buckets are capped at the same n where
+    the flat solver itself goes dense, so the two paths mirror)."""
+    dense = W.to_dense()
+    deg = jnp.sum(dense, axis=1)
+    L = jnp.diag(deg) - dense
+    if cfg.normalized_init:
+        dih = jax.lax.rsqrt(jnp.maximum(deg, 1e-12))
+        L = dih[:, None] * L * dih[None, :]
+    U = _dense_smallest(L, mask, k)
+    return jnp.linalg.qr(U)[0]
+
+
+def _make_level_step(cfg):
+    """One continuation level of the batched solve: (W, mask, U, p) ->
+    (U', fval), traceable end to end (vmap/scan-safe).
+
+    newton: ``rtr_minimize`` verbatim — its lax.while_loop batches with
+    per-element semantics, so each graph in the bucket keeps its own
+    trust-region trajectory.  scf: fixed-sweep IRLS with a per-element
+    convergence freeze (a converged element stops updating, matching the
+    host driver's early exit) and the dense eigensolve of the flat
+    ≤1024-vertex path."""
+    eps = cfg.eps
+    if cfg.solver == "newton":
+        hvp = (plap.hess_eta_graphblas if cfg.hvp_mode == "graphblas"
+               else plap.hess_eta_matrix_free)
+
+        def step(W, mask, U, p):
+            f = lambda V: plap.value(W, V, p, eps, desc=_COO)
+            g = lambda V: plap.euc_grad(W, V, p, eps, desc=_COO)
+            h = lambda V, eta: hvp(W, V, eta, p, eps, desc=_COO)
+            res = rtr_minimize(f, g, h, U, max_iters=cfg.newton_iters,
+                               tcg_iters=cfg.tcg_iters,
+                               grad_tol=cfg.grad_tol)
+            return res.U, res.fval
+
+        return step
+
+    if cfg.solver == "scf":
+        sweeps, tol = max(int(cfg.scf_sweeps), 1), cfg.scf_tol
+
+        def step(W, mask, U, p):
+            k = U.shape[-1]
+
+            def sweep(carry, _):
+                U, done = carry
+                d = U[W.rows] - U[W.cols]
+                g2 = jnp.sum(d * d, axis=-1)
+                what = W.vals * (g2 + eps) ** ((p - 2.0) / 2.0)
+                dense = jnp.zeros((W.n_rows, W.n_rows), U.dtype
+                                  ).at[W.rows, W.cols].add(what)
+                L = jnp.diag(jnp.sum(dense, axis=1)) - dense
+                V = jnp.linalg.qr(_dense_smallest(L, mask, k))[0]
+                drift = k - jnp.sum((V.T @ U) ** 2)
+                U = jnp.where(done, U, V)
+                return (U, done | (drift < tol)), None
+
+            (U, _), _ = jax.lax.scan(sweep, (U, False), None, length=sweeps)
+            return U, plap.value(W, U, p, eps, desc=_COO)
+
+        return step
+
+    raise ValueError(
+        f"bucket lane supports solvers 'newton' and 'scf', not "
+        f"{cfg.solver!r} (route larger drivers through the solo lane)")
+
+
+def _solver_sig(cfg) -> tuple:
+    return (cfg.solver, cfg.hvp_mode, cfg.eps, cfg.newton_iters,
+            cfg.tcg_iters, cfg.grad_tol, cfg.scf_sweeps, cfg.scf_tol,
+            cfg.normalized_init, cfg.p_target, cfg.p_factor,
+            cfg.warm_p_steps)
+
+
+def _bucket_solver(spec: BucketSpec, cfg):
+    """The memoized jitted batched solve for one bucket spec.
+
+    Cold: dense p=2 init + lax.scan over the full continuation schedule
+    (p traced per scan step, static length).  Warm: scan over the last
+    ``cfg.warm_p_steps`` schedule values from the supplied embeddings.
+    Exactly one trace per (spec, solver signature) — ``mark_trace``
+    lands the key in ``registry.SOLVER_TRACES`` so tests and the bench
+    can assert trace reuse across a mixed request stream."""
+    key = spec.key + _solver_sig(cfg)
+
+    def build():
+        if spec.mode == "cold":
+            ps = jnp.asarray(registry.p_schedule(cfg), jnp.float32)
+        else:
+            tail = registry.p_schedule(cfg)[-max(int(cfg.warm_p_steps), 1):]
+            ps = jnp.asarray(tail, jnp.float32)
+        step = _make_level_step(cfg)
+        n_b, nnz_b, k = spec.n, spec.nnz, spec.k
+
+        def one(rows, cols, vals, mask, U0):
+            W = SparseMatrix(n_rows=n_b, n_cols=n_b, nnz=nnz_b,
+                             rows=rows, cols=cols, vals=vals)
+            if spec.mode == "cold":
+                U = _batched_init(W, mask, k, cfg)
+            else:
+                U = jnp.linalg.qr(U0 * mask[:, None])[0]
+
+            def body(U, p):
+                U2, fv = step(W, mask, U, p)
+                return U2, fv
+
+            U, fvals = jax.lax.scan(body, U, ps)
+            return U, fvals
+
+        def solve(rows, cols, vals, mask, U0):
+            registry.mark_trace(key)
+            return jax.vmap(one)(rows, cols, vals, mask, U0)
+
+        return jax.jit(solve)
+
+    return registry.memoized(key, build), key
+
+
+# ------------------------------------------------------------------- engine
+
+@dataclasses.dataclass
+class EngineStats:
+    n_requests: int = 0
+    n_results: int = 0
+    n_batches: int = 0
+    n_solo: int = 0
+    n_churn: int = 0
+    traces: int = 0              # serve-lane traces compiled
+    solve_s: float = 0.0
+    graphs_per_s: float = 0.0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ClusterServeEngine:
+    """Batched, warm-started p-spectral clustering server.
+
+    >>> eng = ClusterServeEngine(PSCConfig(k=4))
+    >>> rid = eng.submit(W)
+    >>> res = eng.flush()[rid]           # labels, rcut, ServeStats
+
+    ``submit`` enqueues; batches launch when a bucket fills to
+    ``max_batch`` or its oldest request has waited ``max_wait_s``
+    (``poll`` drives the clock; ``flush`` drains everything).  Requests
+    above ``max_bucket_n`` vertices run the solo lane — the flat
+    pipeline, or the multilevel V-cycle when ``ml`` is given, with the
+    same cache semantics.
+    """
+
+    def __init__(self, cfg: Optional[PSCConfig] = None, *,
+                 cache_capacity: int = 64, max_batch: int = 8,
+                 max_wait_s: float = 0.05, max_bucket_n: int = 1024,
+                 min_bucket_n: int = 64, min_bucket_nnz: int = 128,
+                 ml=None, weight_quant: float = 1e-6):
+        self.cfg = cfg if cfg is not None else PSCConfig()
+        if self.cfg.reorder != "none":
+            raise ValueError("the serve engine owns vertex order; use "
+                             "reorder='none' in the template config")
+        self.cache = WarmCache(cache_capacity)
+        self.max_batch = int(max_batch)
+        self.max_wait_s = float(max_wait_s)
+        self.max_bucket_n = int(max_bucket_n)
+        self.min_bucket_n = int(min_bucket_n)
+        self.min_bucket_nnz = int(min_bucket_nnz)
+        self.ml = ml
+        self.weight_quant = float(weight_quant)
+        self._buckets: Dict[tuple, List[_Pending]] = {}
+        self._solo: List[_Pending] = []
+        self._results: Dict[int, ServeResult] = {}
+        self._next_id = 0
+        self.stats = EngineStats()
+        self._bucketable = self.cfg.solver in ("newton", "scf")
+
+    # ------------------------------------------------------------ admission
+
+    def submit(self, W: SparseMatrix, k: Optional[int] = None) -> int:
+        """Enqueue a clustering request; returns its request id."""
+        return self._admit(W, k=k)
+
+    def update(self, base: SparseMatrix, delta: EdgeDelta,
+               k: Optional[int] = None) -> int:
+        """Enqueue an incremental re-cluster of ``base`` under ``delta``.
+
+        With a cached solve of ``base`` this is the churn fast path
+        (warm solve on the edited weights; hierarchy patch + refine-only
+        V-cycle on the solo/multilevel lane).  Without one it degrades
+        to a cold solve of the edited graph."""
+        d = apply_edge_delta(base, delta)
+        base_fp = base.fingerprint(self.weight_quant)
+        entry = self.cache.peek(base_fp)
+        return self._admit(d.W, k=k, churn=True, churn_entry=entry,
+                           touched=d.touched,
+                           pattern_changed=d.pattern_changed)
+
+    def _admit(self, W: SparseMatrix, k: Optional[int], churn: bool = False,
+               churn_entry: Optional[CacheEntry] = None,
+               touched=None, pattern_changed: bool = False) -> int:
+        k = int(k) if k is not None else self.cfg.k
+        rid = self._next_id
+        self._next_id += 1
+        self.stats.n_requests += 1
+        fp = W.fingerprint(self.weight_quant)
+
+        if churn:
+            tier, warm_U, hier = None, None, None
+            if churn_entry is not None and len(churn_entry.labels) == W.n_rows:
+                tier, warm_U = "exact", churn_entry.U
+                hier = churn_entry.hierarchy
+            mode = "warm" if warm_U is not None else "cold"
+        else:
+            entry, tier = self.cache.lookup(fp)
+            warm_U = entry.U if entry is not None else None
+            hier = entry.hierarchy if entry is not None else None
+            if warm_U is not None and len(warm_U) != W.n_rows:
+                warm_U, tier, hier = None, None, None   # size collision
+            mode = "warm" if warm_U is not None else "cold"
+
+        pend = _Pending(req_id=rid, W=W, k=k, fp=fp, spec=None, mode=mode,
+                        cache_tier=tier, warm_U=warm_U,
+                        arrival=time.monotonic(), churn=churn,
+                        touched=touched, pattern_changed=pattern_changed,
+                        hierarchy=hier)
+        if self._bucketable and W.n_rows <= self.max_bucket_n \
+                and not (churn and self.ml is not None):
+            spec = bucket_for(W, k, mode, self.min_bucket_n,
+                              self.min_bucket_nnz)
+            pend.spec = spec
+            self._buckets.setdefault(spec.key, []).append(pend)
+        else:
+            self._solo.append(pend)
+        return rid
+
+    # ------------------------------------------------------------- draining
+
+    def poll(self, now: Optional[float] = None) -> Dict[int, ServeResult]:
+        """Launch every due batch (bucket full, or oldest request past
+        the max-wait deadline) and all solo requests; return results
+        completed so far (cumulative)."""
+        now = time.monotonic() if now is None else now
+        for bkey in list(self._buckets):
+            q = self._buckets[bkey]
+            while q and (len(q) >= self.max_batch
+                         or now - q[0].arrival >= self.max_wait_s):
+                take, self._buckets[bkey] = q[:self.max_batch], \
+                    q[self.max_batch:]
+                q = self._buckets[bkey]
+                self._run_bucket(take)
+            if not q:
+                del self._buckets[bkey]
+        while self._solo:
+            self._run_solo(self._solo.pop(0))
+        return dict(self._results)
+
+    def flush(self) -> Dict[int, ServeResult]:
+        """Drain every queued request regardless of deadlines."""
+        for bkey in list(self._buckets):
+            q = self._buckets.pop(bkey)
+            for i in range(0, len(q), self.max_batch):
+                self._run_bucket(q[i:i + self.max_batch])
+        while self._solo:
+            self._run_solo(self._solo.pop(0))
+        return dict(self._results)
+
+    def serve(self, graphs, k: Optional[int] = None) -> List[ServeResult]:
+        """Convenience batch API: submit everything, flush, return
+        results in submission order."""
+        rids = [self.submit(W, k=k) for W in graphs]
+        done = self.flush()
+        return [done[r] for r in rids]
+
+    def take(self, req_id: int) -> ServeResult:
+        return self._results.pop(req_id)
+
+    # ------------------------------------------------------------ execution
+
+    def _run_bucket(self, pends: List[_Pending]) -> None:
+        spec = pends[0].spec
+        t0 = time.monotonic()
+        solver, key = _bucket_solver(spec, self.cfg)
+        n_traces0 = sum(1 for t in registry.SOLVER_TRACES if t == key)
+        batch: BucketBatch = assemble_batch([p.W for p in pends], spec)
+        if spec.mode == "warm":
+            U0 = pad_embeddings([p.warm_U for p in pends], spec)
+        else:
+            U0 = np.zeros((len(pends), spec.n, spec.k), np.float32)
+        # pad the batch axis to max_batch (replicating the last request's
+        # lanes) so a partial batch reuses the full batch's trace — the
+        # one-trace-per-bucket guarantee holds for deadline launches too
+        fill = self.max_batch - len(pends)
+
+        def _fill(a):
+            return a if fill <= 0 else \
+                np.concatenate([a, np.repeat(a[-1:], fill, axis=0)])
+
+        U, fvals = solver(jnp.asarray(_fill(batch.rows)),
+                          jnp.asarray(_fill(batch.cols)),
+                          jnp.asarray(_fill(batch.vals)),
+                          jnp.asarray(_fill(batch.mask)),
+                          jnp.asarray(_fill(U0)))
+        U = np.asarray(U)
+        trace_new = sum(1 for t in registry.SOLVER_TRACES if t == key) \
+            > n_traces0
+        if trace_new:
+            self.stats.traces += 1
+        solve_s = time.monotonic() - t0
+        self.stats.n_batches += 1
+        self.stats.solve_s += solve_s
+        p_final = float(registry.p_schedule(self.cfg)[-1])
+        for b, pend in enumerate(pends):
+            Ub = U[b, :pend.W.n_rows]
+            self._finish(pend, Ub, lane="bucket", batch_size=len(pends),
+                         solve_s=solve_s, trace_new=trace_new,
+                         p_final=p_final, hierarchy=None)
+
+    def _run_solo(self, pend: _Pending) -> None:
+        t0 = time.monotonic()
+        self.stats.n_solo += 1
+        cfg = dataclasses.replace(self.cfg, k=pend.k)
+        hierarchy = None
+        if pend.churn and pend.warm_U is not None:
+            res, hierarchy, _ = incremental_recluster(
+                pend.W, pend.touched, pend.pattern_changed, pend.warm_U,
+                cfg, ml=self.ml, hierarchy=pend.hierarchy)
+        else:
+            if pend.warm_U is not None:
+                cfg = dataclasses.replace(cfg, init_U=pend.warm_U,
+                                          multilevel=None)
+            elif self.ml is not None:
+                cfg = dataclasses.replace(cfg, multilevel=self.ml)
+            res = _psc.p_spectral_cluster(pend.W, cfg)
+            if self.ml is not None and pend.warm_U is None:
+                # keep the hierarchy for future churn ticks
+                from repro.multilevel import build_hierarchy
+                from repro.multilevel.vcycle import _layout_kwargs
+                hierarchy = build_hierarchy(
+                    pend.W, coarse_size=self.ml.coarse_size,
+                    max_levels=self.ml.max_levels,
+                    min_reduction=self.ml.min_reduction,
+                    rounds=self.ml.match_rounds,
+                    layout_kwargs=_layout_kwargs(cfg),
+                    sparsify=self.ml.sparsify,
+                    max_agg=self.ml.match_max_agg)
+        solve_s = time.monotonic() - t0
+        self.stats.solve_s += solve_s
+        p_final = res.p_path[-1] if res.p_path else \
+            float(registry.p_schedule(self.cfg)[-1])
+        self._finish(pend, np.asarray(res.U), lane="solo", batch_size=1,
+                     solve_s=solve_s, trace_new=False, p_final=p_final,
+                     hierarchy=hierarchy, precomputed=res)
+
+    def _finish(self, pend: _Pending, U: np.ndarray, *, lane: str,
+                batch_size: int, solve_s: float, trace_new: bool,
+                p_final: float, hierarchy, precomputed=None) -> None:
+        """Stage 3 + metrics on the caller's original graph, cache
+        store, stats."""
+        W, k = pend.W, pend.k
+        if precomputed is not None:
+            labels = np.asarray(precomputed.labels)
+            rcut, ncut = precomputed.rcut, precomputed.ncut
+        else:
+            _, k_final = _psc.stage_keys(self.cfg.seed)
+            labels = np.asarray(_psc.discretize(
+                jnp.asarray(U), k, k_final,
+                restarts=self.cfg.kmeans_restarts,
+                iters=self.cfg.kmeans_iters))
+            rcut = float(metrics.rcut(W, labels, k))
+            ncut = float(metrics.ncut(W, labels, k))
+        self.cache.store(CacheEntry(
+            U=np.asarray(U), labels=labels, p_final=p_final, rcut=rcut,
+            fingerprint=pend.fp, hierarchy=hierarchy))
+        done = time.monotonic()
+        st = ServeStats(
+            req_id=pend.req_id, n=W.n_rows, nnz=W.nnz, k=k, lane=lane,
+            mode="churn" if pend.churn else pend.mode,
+            cache_tier=pend.cache_tier,
+            bucket=pend.spec.key if pend.spec else None,
+            batch_size=batch_size, queue_s=done - pend.arrival - solve_s,
+            solve_s=solve_s, trace_new=trace_new, p_final=p_final)
+        self._results[pend.req_id] = ServeResult(
+            req_id=pend.req_id, labels=labels, U=np.asarray(U), rcut=rcut,
+            ncut=ncut, stats=st)
+        self.stats.n_results += 1
+        if pend.churn:
+            self.stats.n_churn += 1
+        if self.stats.solve_s > 0:
+            self.stats.graphs_per_s = self.stats.n_results / \
+                self.stats.solve_s

@@ -1,0 +1,115 @@
+"""Warm-start cache for the clustering serve engine (DESIGN.md §8).
+
+An LRU keyed on the graph's :class:`~repro.grblas.containers.
+GraphFingerprint` — (n, nnz, pattern digest, quantized-weight digest).
+Three hit tiers:
+
+  * ``exact``   — same pattern AND same (quantized) weights: the cached
+    labels are directly valid; the engine still re-enters the solver at
+    the schedule tail from the cached U (one cheap step) so the returned
+    embedding is a certified stationary point, but the p=2 eigensolve
+    and the p descent are skipped entirely.
+  * ``pattern`` — same pattern, different weights (the re-weighted-graph
+    tenant: affinity refresh, time-decayed edges).  The cached U is a
+    valid Grassmann warm start on the new weights — exactly the
+    ``lobpcg.smallest_eigvecs`` X0 substrate, lifted to the nonlinear
+    solve — but the cached labels are NOT reused.
+  * miss        — full cold solve.
+
+Entries may carry the multilevel hierarchy of large (solo-lane) graphs,
+which the churn path patches instead of rebuilding
+(``multilevel.coarsen.patch_hierarchy``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.grblas.containers import GraphFingerprint
+
+
+@dataclasses.dataclass
+class CacheEntry:
+    """What a finished solve leaves behind for the next tenant."""
+
+    U: np.ndarray                    # (n, k) final embedding
+    labels: np.ndarray               # (n,) discretized clusters
+    p_final: float                   # where the continuation ended
+    rcut: float
+    fingerprint: GraphFingerprint
+    hierarchy: object = None         # multilevel Hierarchy (solo lane)
+
+
+class WarmCache:
+    """LRU over full fingerprints with a pattern-key secondary index.
+
+    The secondary index maps ``fingerprint.pattern_key`` → the most
+    recently *stored* full key with that pattern, so a same-pattern /
+    different-weights request finds a warm start in O(1) without
+    scanning.  Eviction is strict LRU on the primary map; the pattern
+    index never pins an entry alive (it is repaired lazily on lookup).
+    """
+
+    def __init__(self, capacity: int = 64):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = int(capacity)
+        self._lru: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
+        self._by_pattern: Dict[tuple, tuple] = {}
+        self.hits_exact = 0
+        self.hits_pattern = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._lru)
+
+    def __contains__(self, fp: GraphFingerprint) -> bool:
+        return fp.key in self._lru
+
+    def peek(self, fp: GraphFingerprint) -> Optional[CacheEntry]:
+        """Exact-key lookup with no LRU refresh and no hit/miss
+        accounting (the churn path's base-graph probe)."""
+        return self._lru.get(fp.key)
+
+    def lookup(self, fp: GraphFingerprint
+               ) -> Tuple[Optional[CacheEntry], Optional[str]]:
+        """(entry, tier) — tier "exact" | "pattern" | None.  Counts the
+        hit/miss and refreshes LRU recency on exact hits."""
+        entry = self._lru.get(fp.key)
+        if entry is not None:
+            self._lru.move_to_end(fp.key)
+            self.hits_exact += 1
+            return entry, "exact"
+        pkey = self._by_pattern.get(fp.pattern_key)
+        if pkey is not None:
+            entry = self._lru.get(pkey)
+            if entry is None:                 # stale index (evicted)
+                del self._by_pattern[fp.pattern_key]
+            else:
+                self._lru.move_to_end(pkey)
+                self.hits_pattern += 1
+                return entry, "pattern"
+        self.misses += 1
+        return None, None
+
+    def store(self, entry: CacheEntry) -> None:
+        fp = entry.fingerprint
+        self._lru[fp.key] = entry
+        self._lru.move_to_end(fp.key)
+        self._by_pattern[fp.pattern_key] = fp.key
+        while len(self._lru) > self.capacity:
+            old_key, old = self._lru.popitem(last=False)
+            self.evictions += 1
+            pk = old.fingerprint.pattern_key
+            if self._by_pattern.get(pk) == old_key:
+                del self._by_pattern[pk]
+
+    def stats(self) -> dict:
+        return {"size": len(self._lru), "capacity": self.capacity,
+                "hits_exact": self.hits_exact,
+                "hits_pattern": self.hits_pattern,
+                "misses": self.misses, "evictions": self.evictions}

@@ -1,8 +1,8 @@
 """The solver-driver registry (core.solvers, DESIGN.md §7): dispatch +
 config-time validation rules, newton ≡ scf ≡ inverse_power cluster
 equivalence where all drivers converge, per-level V-cycle solver choice,
-the p_multi shim contract, and driver source purity (no scipy, no raw
-segment_sum — every driver consumes the same api.mxm rings)."""
+the pmulti-removal absence pin, and driver source purity (no scipy, no
+raw segment_sum — every driver consumes the same api.mxm rings)."""
 import warnings
 from pathlib import Path
 
@@ -10,7 +10,7 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
-from repro.core import PSCConfig, metrics, p_multi, p_spectral_cluster, solvers
+from repro.core import PSCConfig, metrics, p_spectral_cluster, solvers
 from repro.core.solvers import (SolverReport, SolverState,
                                 SolverUnavailableError)
 from repro.graphs import (delaunay_graph, gaussian_blobs_knn,
@@ -166,21 +166,30 @@ def test_partition_threads_solver():
     assert np.isfinite(info["rcut"])
 
 
-def test_pmulti_is_a_shim_over_inverse_power():
-    W, truth = ring_of_cliques(4, 10)
-    with warnings.catch_warnings(record=True) as rec:
-        warnings.simplefilter("always")
-        labels, rcut = p_multi(W, 4, p=1.2, seed=0, iters=60)
-    assert any(issubclass(w.category, DeprecationWarning) for w in rec)
-    assert metrics.clustering_accuracy(labels, truth, 4) == 1.0
-    assert np.isfinite(rcut)
-    # the private projected-gradient loop is gone for good
-    from repro.core import pmulti as _pmulti
+def test_pmulti_shim_is_gone():
+    """The one-release deprecation window closed: core.pmulti no longer
+    exists, and its replacement — the registry's inverse_power driver
+    entered at a single p — covers the historical behavior (pinned in
+    DESIGN.md §3's migration table)."""
+    with pytest.raises(ImportError):
+        from repro.core import pmulti  # noqa: F401
+    import repro.core as core
 
-    assert not hasattr(_pmulti, "_minimize_single")
-    # registry validation now applies to the shim too
-    with pytest.raises(ValueError, match="supported range"):
-        p_multi(W, 4, p=0.5)
+    assert not hasattr(core, "p_multi")
+    # the replacement path delivers the same clusters the shim did
+    W, truth = ring_of_cliques(4, 10)
+    cfg = PSCConfig(k=4, p_target=1.2, seed=0, solver="inverse_power",
+                    ipm_iters=60)
+    from repro.core import lobpcg
+
+    _, U2 = lobpcg.smallest_eigvecs(W, 4, seed=0)
+    rep = solvers.minimize_at_p(W, U2, 1.2, cfg)
+    from repro.core.psc import discretize
+
+    import jax
+
+    labels = np.asarray(discretize(rep.U, 4, jax.random.PRNGKey(0)))
+    assert metrics.clustering_accuracy(labels, truth, 4) == 1.0
 
 
 def test_scf_continuation_hits_one_trace():

@@ -1,0 +1,231 @@
+"""Warm-start cache + churn semantics (DESIGN.md §8): fingerprint
+identity, LRU hit/miss/evict accounting, pattern-tier lookup, EdgeDelta
+validation, the with_vals weight-only fast path, and incremental
+re-clustering correctness against a from-scratch solve."""
+import numpy as np
+import pytest
+
+from repro.core import PSCConfig, p_spectral_cluster
+from repro.graphs import ring_of_cliques, sbm_graph
+from repro.grblas.containers import SparseMatrix
+from repro.serve import (CacheEntry, EdgeDelta, WarmCache, apply_edge_delta,
+                         incremental_recluster)
+
+
+def _entry(fp, tag=0.0):
+    n, k = fp.n, 3
+    return CacheEntry(U=np.full((n, k), tag), labels=np.zeros(n, np.int64),
+                      p_final=1.2, rcut=1.0, fingerprint=fp)
+
+
+def _graph(scale=1.0, n=12):
+    i = np.arange(n - 1)
+    W = SparseMatrix.from_coo(np.r_[i, i + 1], np.r_[i + 1, i],
+                              np.full(2 * (n - 1), scale), (n, n))
+    return W
+
+
+# ------------------------------------------------------------- fingerprints
+
+def test_fingerprint_identity_and_quantization():
+    W = _graph()
+    fp = W.fingerprint()
+    assert (fp.n, fp.nnz) == (12, 22)
+    assert fp == W.fingerprint()                       # deterministic
+    # same pattern, different weights: pattern_key equal, key not
+    fp2 = _graph(scale=2.0).fingerprint()
+    assert fp2.pattern_key == fp.pattern_key
+    assert fp2.key != fp.key
+    assert fp2.weights != fp.weights
+    # sub-quantum weight jitter does not change the fingerprint
+    Wj = W.with_vals(np.asarray(W.vals) + 1e-10)
+    assert Wj.fingerprint(weight_quant=1e-6).key == \
+        W.fingerprint(weight_quant=1e-6).key
+    # different pattern, same weights: pattern_key differs
+    i = np.arange(10)
+    Wp = SparseMatrix.from_coo(np.r_[i, i + 2], np.r_[i + 2, i],
+                               np.ones(20), (12, 12))
+    assert Wp.fingerprint().pattern_key != fp.pattern_key
+
+
+# --------------------------------------------------------------- cache core
+
+def test_cache_hit_miss_evict_lru():
+    cache = WarmCache(capacity=2)
+    fa, fb, fc = (_graph(s, n).fingerprint()
+                  for s, n in [(1.0, 12), (1.0, 16), (1.0, 20)])
+    assert cache.lookup(fa) == (None, None)
+    assert cache.misses == 1
+    cache.store(_entry(fa, 1.0))
+    cache.store(_entry(fb, 2.0))
+    ea, tier = cache.lookup(fa)                        # refresh fa's recency
+    assert tier == "exact" and ea.U[0, 0] == 1.0
+    assert cache.hits_exact == 1
+    cache.store(_entry(fc, 3.0))                       # evicts fb (LRU)
+    assert cache.evictions == 1 and len(cache) == 2
+    assert fa in cache and fc in cache and fb not in cache
+    assert cache.lookup(fb) == (None, None)
+    st = cache.stats()
+    assert st == {"size": 2, "capacity": 2, "hits_exact": 1,
+                  "hits_pattern": 0, "misses": 2, "evictions": 1}
+
+
+def test_cache_pattern_tier_and_stale_index():
+    cache = WarmCache(capacity=1)
+    W = _graph(1.0)
+    cache.store(_entry(W.fingerprint(), 7.0))
+    entry, tier = cache.lookup(_graph(3.0).fingerprint())
+    assert tier == "pattern" and entry.U[0, 0] == 7.0
+    assert cache.hits_pattern == 1
+    # evict the only entry; the pattern index must repair itself
+    other = _graph(1.0, n=16).fingerprint()
+    cache.store(_entry(other))
+    entry, tier = cache.lookup(_graph(3.0).fingerprint())
+    assert entry is None and tier is None
+
+
+def test_cache_peek_does_no_accounting():
+    cache = WarmCache(capacity=4)
+    fp = _graph().fingerprint()
+    assert cache.peek(fp) is None
+    cache.store(_entry(fp))
+    assert cache.peek(fp) is not None
+    assert cache.misses == 0 and cache.hits_exact == 0
+
+
+def test_cache_capacity_validated():
+    with pytest.raises(ValueError):
+        WarmCache(capacity=0)
+
+
+# ---------------------------------------------------------------- EdgeDelta
+
+def test_edge_delta_validation():
+    with pytest.raises(ValueError, match="self-loops"):
+        EdgeDelta(np.array([1]), np.array([1]), np.array([1.0]))
+    with pytest.raises(ValueError, match="equal length"):
+        EdgeDelta(np.array([1]), np.array([2, 3]), np.array([1.0]))
+    d = EdgeDelta([0, 5], [3, 2], [1.0, 0.0])
+    np.testing.assert_array_equal(d.touched, [0, 2, 3, 5])
+
+
+def test_apply_edge_delta_out_of_range():
+    W = _graph()
+    with pytest.raises(ValueError, match="out of range"):
+        apply_edge_delta(W, EdgeDelta([0], [99], [1.0]))
+
+
+def test_apply_edge_delta_weights_only_fast_path():
+    W = _graph()
+    d = apply_edge_delta(W, EdgeDelta([0, 5], [1, 6], [4.0, 0.0]))
+    assert not d.pattern_changed
+    W2 = d.W
+    # layout shared: identical pattern arrays, same nnz
+    assert W2.nnz == W.nnz
+    np.testing.assert_array_equal(np.asarray(W2.rows), np.asarray(W.rows))
+    np.testing.assert_array_equal(np.asarray(W2.cols), np.asarray(W.cols))
+    dense, dense2 = np.asarray(W.to_dense()), np.asarray(W2.to_dense())
+    assert dense2[0, 1] == 4.0 and dense2[1, 0] == 4.0   # both directions
+    assert dense2[5, 6] == 0.0 and dense2[6, 5] == 0.0   # explicit zero
+    # untouched entries identical
+    m = np.ones_like(dense, bool)
+    m[[0, 1, 5, 6], [1, 0, 6, 5]] = False
+    np.testing.assert_array_equal(dense2[m], dense[m])
+    # pattern digest unchanged -> warm cache sees the pattern tier
+    assert W2.fingerprint().pattern_key == W.fingerprint().pattern_key
+
+
+def test_apply_edge_delta_pattern_paths():
+    W = _graph()
+    # insertion: new pair forces a rebuild with nnz + 2
+    d = apply_edge_delta(W, EdgeDelta([0], [7], [2.5]))
+    assert d.pattern_changed and d.W.nnz == W.nnz + 2
+    assert np.asarray(d.W.to_dense())[7, 0] == 2.5
+    # removing a missing pair inserts nothing (conservatively reported
+    # as a pattern event: the rebuild ran, even though nnz is unchanged)
+    d0 = apply_edge_delta(W, EdgeDelta([0], [7], [0.0]))
+    assert d0.W.nnz == W.nnz
+    assert d0.W.fingerprint().pattern_key == W.fingerprint().pattern_key
+    # hard removal drops the stored entries entirely
+    dr = apply_edge_delta(W, EdgeDelta([3], [4], [0.0]), drop_removed=True)
+    assert dr.pattern_changed and dr.W.nnz == W.nnz - 2
+    assert dr.W.fingerprint().pattern_key != W.fingerprint().pattern_key
+
+
+# ------------------------------------------------------- churn correctness
+
+def _flip_edges(W, frac, seed):
+    """Down-weight ``frac`` of the undirected edges to zero (weight-only
+    churn) — the serve_bench SBM scenario."""
+    rng = np.random.default_rng(seed)
+    und = np.flatnonzero(np.asarray(W.rows) < np.asarray(W.cols))
+    pick = rng.choice(und, max(1, int(frac * len(und))), replace=False)
+    return EdgeDelta(np.asarray(W.rows)[pick], np.asarray(W.cols)[pick],
+                     np.zeros(len(pick)))
+
+
+def test_incremental_recluster_flat_matches_scratch():
+    """1% SBM edge churn: warm re-entry from the cached embedding lands
+    within 2% RCut of a cold solve of the edited graph (the bench
+    acceptance bound), and reuses the pattern via with_vals."""
+    W, _ = sbm_graph([40, 40, 40, 40], 0.25, 0.02, seed=2)
+    cfg = PSCConfig(k=4, reorder="none", newton_iters=20, tcg_iters=12,
+                    kmeans_restarts=4)
+    base = p_spectral_cluster(W, cfg)
+
+    d = apply_edge_delta(W, _flip_edges(W, 0.01, seed=3))
+    assert not d.pattern_changed
+    res, hier, records = incremental_recluster(
+        d.W, d.touched, d.pattern_changed, np.asarray(base.U), cfg)
+    assert hier is None and records == []
+    scratch = p_spectral_cluster(d.W, cfg)
+    assert res.rcut <= scratch.rcut * 1.02 + 1e-12
+    # the warm path entered at the schedule tail, not at p=2
+    assert len(res.p_path) <= cfg.warm_p_steps
+    assert res.p_path[-1] == pytest.approx(scratch.p_path[-1])
+
+
+def test_incremental_recluster_multilevel_patches_hierarchy():
+    """Pattern churn on the multilevel lane: the cached hierarchy is
+    patched (records returned) and the refined result stays within 2%
+    RCut of a from-scratch multilevel solve."""
+    from repro.multilevel import MultilevelConfig, build_hierarchy
+
+    W, _ = sbm_graph([300] * 4, 0.06, 0.004, seed=1)
+    ml = MultilevelConfig(coarse_size=120)
+    cfg = PSCConfig(k=4, reorder="none", multilevel=ml)
+    base = p_spectral_cluster(W, cfg)
+    hier = build_hierarchy(W, coarse_size=ml.coarse_size)
+
+    rng = np.random.default_rng(5)
+    i = rng.integers(0, 600, 6)
+    j = rng.integers(600, 1200, 6)
+    d = apply_edge_delta(W, EdgeDelta(i, j, np.full(6, 0.5)))
+    assert d.pattern_changed
+    res, hier2, records = incremental_recluster(
+        d.W, d.touched, d.pattern_changed, np.asarray(base.U), cfg,
+        ml=ml, hierarchy=hier)
+    assert hier2 is not None and len(records) == hier.n_levels - 1
+    scratch = p_spectral_cluster(d.W, cfg)
+    assert res.rcut <= scratch.rcut * 1.02 + 1e-12
+
+
+def test_warm_start_config_on_flat_pipeline():
+    """PSCConfig.init_U warm entry reproduces the cold solve's labels on
+    an unchanged graph and skips the continuation (p_path is the tail)."""
+    W, _ = ring_of_cliques(4, 10)
+    cfg = PSCConfig(k=4, reorder="none", newton_iters=20, tcg_iters=12,
+                    kmeans_restarts=4)
+    import dataclasses
+    cold = p_spectral_cluster(W, cfg)
+    warm = p_spectral_cluster(W, dataclasses.replace(
+        cfg, init_U=np.asarray(cold.U)))
+    np.testing.assert_array_equal(np.asarray(warm.labels),
+                                  np.asarray(cold.labels))
+    assert warm.rcut == pytest.approx(cold.rcut, rel=1e-9)
+    assert len(warm.p_path) == cfg.warm_p_steps
+    assert warm.init_labels is None and np.isnan(warm.init_rcut)
+    # reports thread through (satellite b)
+    assert warm.reports is not None and len(warm.reports) >= 1
+    assert cold.reports is not None and len(cold.reports) == \
+        len(cold.p_path)

@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test test-dist test-serve dryrun-smoke \
+.PHONY: verify imports test test-dist test-serve test-chaos dryrun-smoke \
 	bench-kernels bench-multilevel bench-dist bench-solvers bench-serve
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
@@ -56,6 +56,13 @@ test-dist:
 # semantics (DESIGN.md §8).
 test-serve:
 	$(PY) -m pytest -x -q tests/test_psc_serve.py tests/test_warm_cache.py
+
+# Chaos / resilience suite (DESIGN.md §9): injected faults must fire
+# every recovery-ladder rung and the serve isolation paths, plus the
+# degenerate-graph admission tests.  Faults are deterministic;
+# `CHAOS_SEED=<n> make test-chaos` replays a specific draw.
+test-chaos:
+	$(PY) -m pytest -x -q tests/test_chaos.py tests/test_degenerate_graphs.py
 
 # Regenerates the committed BENCH_serve.json: one trace per bucket over
 # a mixed stream, warm >= 3x cold at equal RCut, incremental churn

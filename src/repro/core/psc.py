@@ -104,11 +104,28 @@ class PSCConfig:
     # warm cache feeds.  init_labels/init_rcut are not computed.
     init_U: object = None
     warm_p_steps: int = 1
+    # resilience (DESIGN.md §9): ``guard`` = None (off) | True (default
+    # GuardConfig) | a solvers.GuardConfig — wraps the continuation in
+    # per-level health checks and the recovery ladder
+    # (solvers.resilient_continuation).  ``validate`` = None (off) |
+    # True (strict) | a graphs.validate.ValidateConfig — input
+    # validation + per-component clustering of disconnected graphs
+    # before the solve.
+    guard: object = None
+    validate: object = None
 
     def __post_init__(self):
         # config-time applicability check: solver name resolves and the
         # whole continuation schedule sits in its supported p range
         solvers.validate_config(self)
+        if self.k < 1:
+            raise ValueError(f"k={self.k} must be >= 1")
+        if self.guard or self.solver == "guarded":
+            solvers.guard.validate_guard(self)
+        if self.validate:
+            from repro.graphs import validate as _validate
+
+            _validate.coerce_validate(self.validate)
 
     def descriptor(self) -> Descriptor:
         return Descriptor(backend=self.backend, interpret=self.interpret)
@@ -152,6 +169,14 @@ class PSCResult:
     # refinements).  Optional for back-compat — the serve engine and
     # benchmarks meter convergence from it without re-running.
     reports: Optional[list] = None
+    # guarded runs only (PSCConfig.guard / solver="guarded"): the
+    # solvers.RecoveryReport — what diverged and which ladder rung
+    # brought the solve home (DESIGN.md §9)
+    recovery: Optional[object] = None
+    # per-component runs only (PSCConfig.validate on a disconnected
+    # graph): one summary dict per connected component
+    # {"n", "k", "rcut"} in component order (graphs.validate)
+    components: Optional[list] = None
 
 
 def stage_keys(seed: int):
@@ -175,8 +200,45 @@ def discretize(U: jnp.ndarray, k: int, key, restarts: int = 8,
     return labels
 
 
+def _trivial_result(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
+    """Degenerate k handled in closed form: k=1 is the all-ones cluster
+    (the Laplacian kernel — no eigensolve or kmeans needed), k=n puts
+    every vertex in its own cluster (U = I is the only orthonormal
+    basis of R^n up to rotation)."""
+    n, k = W.n_rows, cfg.k
+    if k == 1:
+        labels = np.zeros(n, np.int64)
+        U = jnp.full((n, 1), 1.0 / np.sqrt(max(n, 1)), jnp.float32)
+    else:                                            # k == n
+        labels = np.arange(n, dtype=np.int64)
+        U = jnp.eye(n, dtype=jnp.float32)
+    rcut = float(metrics.rcut(W, labels, k))
+    ncut = float(metrics.ncut(W, labels, k))
+    return PSCResult(labels=labels, U=U, rcut=rcut, ncut=ncut,
+                     p_path=[], fvals=[], hvp_counts=[],
+                     init_labels=labels.copy(), init_rcut=rcut, reports=[])
+
+
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     """Run the full GrB-pGrass pipeline on graph W."""
+    n = W.n_rows
+    if n == 0:
+        raise ValueError("cannot cluster an empty graph (n_rows == 0): "
+                         "build the SparseMatrix with at least one vertex")
+    if cfg.k > n:
+        raise ValueError(f"k={cfg.k} exceeds the number of vertices "
+                         f"n={n}; every cluster needs at least one vertex")
+    if cfg.validate:
+        from repro.graphs import validate as _validate
+
+        vcfg = _validate.coerce_validate(cfg.validate)
+        W = _validate.validate_graph(W, vcfg)
+        if 1 < cfg.k < n:
+            comps = _validate.connected_components(W)
+            if comps.n_components > 1:
+                return _validate.cluster_components(W, cfg, comps)
+    if cfg.k == 1 or cfg.k == n:
+        return _trivial_result(W, cfg)
     if cfg.multilevel:
         from repro.multilevel.vcycle import (MultilevelConfig,
                                              multilevel_cluster)
@@ -191,6 +253,7 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
         W, perm, inv = _reorder(W, method=cfg.reorder)
     cfg.validate_backend(W)
     k_init, k_final = stage_keys(cfg.seed)
+    recovery = None
 
     if cfg.init_U is not None:
         # -- warm start (DESIGN.md §8): a previous embedding is a valid
@@ -205,8 +268,12 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
         U = jnp.linalg.qr(U)[0]
         init_labels = None
         init_rcut = float("nan")
-        U, p_path, fvals, hvps, reports = solvers.warm_start(
-            W, U, cfg, steps=cfg.warm_p_steps)
+        if cfg.guard or cfg.solver == "guarded":
+            U, p_path, fvals, hvps, reports, recovery = \
+                solvers.resilient_warm_start(W, U, cfg)
+        else:
+            U, p_path, fvals, hvps, reports = solvers.warm_start(
+                W, U, cfg, steps=cfg.warm_p_steps)
     else:
         # -- stage 1: linear (p=2) spectral start.  The stage-1 matvec
         # runs under the reals ring, so forward the configured
@@ -222,8 +289,15 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
                                    iters=cfg.kmeans_iters)
         init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
 
-        # -- stage 2: p-continuation under the registered driver
-        U, p_path, fvals, hvps, reports = solvers.p_continuation(W, U, cfg)
+        # -- stage 2: p-continuation under the registered driver (the
+        # guarded path adds per-level health checks and the recovery
+        # ladder — DESIGN.md §9)
+        if cfg.guard or cfg.solver == "guarded":
+            U, p_path, fvals, hvps, reports, recovery = \
+                solvers.resilient_continuation(W, U, cfg)
+        else:
+            U, p_path, fvals, hvps, reports = solvers.p_continuation(
+                W, U, cfg)
 
     # -- stage 3: kmeans discretization of the nonlinear eigenvectors
     labels = discretize(U, cfg.k, k_final, restarts=cfg.kmeans_restarts,
@@ -248,7 +322,7 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
         rcut=rcut, ncut=ncut,
         p_path=p_path, fvals=fvals, hvp_counts=hvps,
         init_labels=init_labels, init_rcut=init_rcut,
-        reports=reports)
+        reports=reports, recovery=recovery)
 
 
 def spectral_cluster(W: SparseMatrix, k: int, seed: int = 0,

@@ -24,6 +24,15 @@ from repro.core.solvers.registry import (
     warm_start,
 )
 from repro.core.solvers import newton, scf, inverse_power  # register drivers
+from repro.core.solvers import guard  # registers "guarded" (DESIGN.md §9)
+from repro.core.solvers.guard import (
+    GuardConfig,
+    RecoveryReport,
+    RungRecord,
+    SolverDivergence,
+    resilient_continuation,
+    resilient_warm_start,
+)
 
 __all__ = [
     "SOLVER_TRACES", "Solver", "SolverReport", "SolverState",
@@ -31,4 +40,6 @@ __all__ = [
     "mark_trace", "minimize_at_p", "p_continuation", "p_schedule",
     "register_solver", "registered_solvers", "resolve_solver",
     "validate_config", "warm_start", "newton", "scf", "inverse_power",
+    "guard", "GuardConfig", "RecoveryReport", "RungRecord",
+    "SolverDivergence", "resilient_continuation", "resilient_warm_start",
 ]

@@ -17,3 +17,12 @@ from repro.graphs.reorder import (
 )
 
 __all__ += ["reorder", "rcm_ordering", "degree_ordering", "bandwidth"]
+from repro.graphs.validate import (
+    Components, GraphValidationError, ValidateConfig, allocate_k,
+    cluster_components, connected_components, isolated_vertices,
+    quick_check, validate_graph,
+)
+
+__all__ += ["Components", "GraphValidationError", "ValidateConfig",
+            "allocate_k", "cluster_components", "connected_components",
+            "isolated_vertices", "quick_check", "validate_graph"]

@@ -409,6 +409,13 @@ class SparseMatrix:
         pattern = h.hexdigest()
         hw = hashlib.blake2b(digest_size=16)
         q = np.round(np.asarray(vals, np.float64) / weight_quant)
+        # non-finite weights (caught downstream by graphs.validate /
+        # serve admission) still need a stable digest: map them onto
+        # sentinel quanta instead of tripping the int cast
+        if not np.isfinite(q).all():
+            q = np.nan_to_num(q, nan=np.iinfo(np.int64).min + 1,
+                              posinf=np.iinfo(np.int64).max,
+                              neginf=np.iinfo(np.int64).min)
         hw.update(q.astype(np.int64).tobytes())
         return GraphFingerprint(n=self.n_rows, nnz=self.nnz,
                                 pattern=pattern, weights=hw.hexdigest())

@@ -350,6 +350,19 @@ def make_row_partition(A: SparseMatrix, n_shards: int,
 
 # ----------------------------------------------------------------- execution
 
+# Fault-injection seam (repro.testing.faultinject, DESIGN.md §9): when
+# set, the hook rewrites the received halo block inside the shard-mapped
+# exchange — fn(recv, Ap) -> recv, jnp ops only (it runs traced).  Used
+# by the chaos suite to model corrupted / dropped halo rows; production
+# leaves it None.
+_HALO_FAULT_HOOK = None
+
+
+def set_halo_fault_hook(hook) -> None:
+    global _HALO_FAULT_HOOK
+    _HALO_FAULT_HOOK = hook
+
+
 def _exchange(Ap: RowPartitionedMatrix, x_local, send_idx, axis: str):
     """The shard-local halo exchange: gather the rows this shard owes
     every peer, one tiled all_to_all, append the received halo."""
@@ -358,6 +371,8 @@ def _exchange(Ap: RowPartitionedMatrix, x_local, send_idx, axis: str):
     xs = x_local[send_idx]                    # (S*H, k) send buffer
     recv = jax.lax.all_to_all(xs, axis, split_axis=0, concat_axis=0,
                               tiled=True)     # block s = rows from shard s
+    if _HALO_FAULT_HOOK is not None:
+        recv = _HALO_FAULT_HOOK(recv, Ap)
     return jnp.concatenate([x_local, recv], axis=0)
 
 

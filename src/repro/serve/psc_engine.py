@@ -53,7 +53,9 @@ from repro.core import psc as _psc
 from repro.core.grassmann import rtr_minimize
 from repro.core.psc import PSCConfig
 from repro.core.solvers import registry
+from repro.core.solvers.guard import SolverDivergence
 from repro.grblas.api import Descriptor
+from repro.grblas.backends import BackendUnavailableError
 from repro.grblas.containers import GraphFingerprint, SparseMatrix
 from repro.serve.bucketing import (BucketBatch, BucketSpec, assemble_batch,
                                    bucket_for, pad_embeddings)
@@ -68,6 +70,13 @@ from repro.serve.warm_cache import CacheEntry, WarmCache
 _PAD_SHIFT = 1.0e6
 
 _COO = Descriptor(backend="coo")
+
+# Fault-injection seams (repro.testing.faultinject, DESIGN.md §9): when
+# set, called right before a bucket batch solve / a churn re-solve.
+# Raising from them exercises the quarantine-bisect and retry paths
+# deterministically; production leaves them None.
+_SOLVE_FAULT = None     # fn(pends: List[_Pending]) -> None
+_CHURN_FAULT = None     # fn(pend: _Pending, attempt: int) -> None
 
 
 # --------------------------------------------------------------- stats types
@@ -89,6 +98,11 @@ class ServeStats:
     solve_s: float
     trace_new: bool              # this request's batch compiled a new trace
     p_final: float
+    # resilience accounting (DESIGN.md §9) — defaulted for back-compat
+    degrade: int = 0             # 0 none | 1 schedule-tail-only | 2 p=2-init
+    retries: int = 0             # churn-path retry count before success
+    failure_kind: Optional[str] = None   # taxonomy key (failed requests)
+    error: Optional[str] = None          # human-readable failure detail
 
 
 @dataclasses.dataclass
@@ -99,6 +113,13 @@ class ServeResult:
     rcut: float
     ncut: float
     stats: ServeStats
+    # failed requests carry the structured error here (labels/U None,
+    # rcut/ncut NaN); healthy requests leave it None
+    error: Optional[str] = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 @dataclasses.dataclass
@@ -116,6 +137,7 @@ class _Pending:
     touched: Optional[np.ndarray] = None
     pattern_changed: bool = False
     hierarchy: object = None
+    degrade: int = 0                # deadline degradation level (0/1/2)
 
 
 # ------------------------------------------------------ batched solver build
@@ -262,9 +284,31 @@ class EngineStats:
     traces: int = 0              # serve-lane traces compiled
     solve_s: float = 0.0
     graphs_per_s: float = 0.0
+    # failure taxonomy (DESIGN.md §9)
+    n_failed: int = 0            # requests returning a structured error
+    n_degraded: int = 0          # requests served at degrade level >= 1
+    n_retried: int = 0           # churn re-solve retry attempts
+    n_quarantined: int = 0       # poisoned requests isolated from a batch
+    n_quarantine_splits: int = 0  # bisection rounds run to isolate them
+    failures: Dict[str, int] = dataclasses.field(default_factory=dict)
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def _classify(err) -> str:
+    """Failure-taxonomy key of an exception (DESIGN.md §9)."""
+    if isinstance(err, BackendUnavailableError):
+        return "backend_error"
+    if isinstance(err, SolverDivergence):
+        return "solver_divergence"
+    from repro.graphs.validate import GraphValidationError
+
+    if isinstance(err, GraphValidationError):
+        return "invalid_input"
+    if isinstance(err, BaseException):
+        return "exception"
+    return "nonfinite_result"
 
 
 class ClusterServeEngine:
@@ -286,7 +330,11 @@ class ClusterServeEngine:
                  cache_capacity: int = 64, max_batch: int = 8,
                  max_wait_s: float = 0.05, max_bucket_n: int = 1024,
                  min_bucket_n: int = 64, min_bucket_nnz: int = 128,
-                 ml=None, weight_quant: float = 1e-6):
+                 ml=None, weight_quant: float = 1e-6,
+                 deadline_s: Optional[float] = None,
+                 tail_frac: float = 0.5, churn_retries: int = 2,
+                 retry_backoff_s: float = 0.01,
+                 validate_inputs: bool = False):
         self.cfg = cfg if cfg is not None else PSCConfig()
         if self.cfg.reorder != "none":
             raise ValueError("the serve engine owns vertex order; use "
@@ -299,6 +347,17 @@ class ClusterServeEngine:
         self.min_bucket_nnz = int(min_bucket_nnz)
         self.ml = ml
         self.weight_quant = float(weight_quant)
+        # resilience knobs (DESIGN.md §9): a request older than
+        # ``tail_frac * deadline_s`` degrades to a schedule-tail-only
+        # solve (level 1); older than ``deadline_s`` to p=2-init labels
+        # (level 2).  Churn re-solves retry ``churn_retries`` times with
+        # exponential backoff before falling back to a cold solve.
+        self.deadline_s = None if deadline_s is None else float(deadline_s)
+        self.tail_frac = float(tail_frac)
+        self.churn_retries = int(churn_retries)
+        self.retry_backoff_s = float(retry_backoff_s)
+        self.validate_inputs = bool(validate_inputs)
+        self._sleep = time.sleep          # test seam (no real sleeps)
         self._buckets: Dict[tuple, List[_Pending]] = {}
         self._solo: List[_Pending] = []
         self._results: Dict[int, ServeResult] = {}
@@ -331,9 +390,25 @@ class ClusterServeEngine:
                churn_entry: Optional[CacheEntry] = None,
                touched=None, pattern_changed: bool = False) -> int:
         k = int(k) if k is not None else self.cfg.k
+        if k < 1 or k > max(W.n_rows, 1):
+            raise ValueError(f"k={k} invalid for an n={W.n_rows} graph "
+                             f"(need 1 <= k <= n)")
         rid = self._next_id
         self._next_id += 1
         self.stats.n_requests += 1
+        if self.validate_inputs:
+            from repro.graphs.validate import quick_check
+
+            issue = quick_check(W)
+            if issue is not None:
+                # reject at admission: the request gets its structured
+                # error immediately and never reaches a batch
+                pend = _Pending(req_id=rid, W=W, k=k, fp=None, spec=None,
+                                mode="cold", cache_tier=None, warm_U=None,
+                                arrival=time.monotonic(), churn=churn)
+                self._fail(pend, issue, kind="invalid_input",
+                           lane="admission")
+                return rid
         fp = W.fingerprint(self.weight_quant)
 
         if churn:
@@ -355,7 +430,11 @@ class ClusterServeEngine:
                         arrival=time.monotonic(), churn=churn,
                         touched=touched, pattern_changed=pattern_changed,
                         hierarchy=hier)
+        # k == 1 / k == n requests ride the solo lane: the pipeline
+        # answers them in closed form there, while the batched bucket
+        # solve assumes a proper 1 < k < n eigenproblem
         if self._bucketable and W.n_rows <= self.max_bucket_n \
+                and 1 < k < W.n_rows \
                 and not (churn and self.ml is not None):
             spec = bucket_for(W, k, mode, self.min_bucket_n,
                               self.min_bucket_nnz)
@@ -372,6 +451,7 @@ class ClusterServeEngine:
         the max-wait deadline) and all solo requests; return results
         completed so far (cumulative)."""
         now = time.monotonic() if now is None else now
+        self._apply_deadlines(now)
         for bkey in list(self._buckets):
             q = self._buckets[bkey]
             while q and (len(q) >= self.max_batch
@@ -388,6 +468,7 @@ class ClusterServeEngine:
 
     def flush(self) -> Dict[int, ServeResult]:
         """Drain every queued request regardless of deadlines."""
+        self._apply_deadlines(time.monotonic())
         for bkey in list(self._buckets):
             q = self._buckets.pop(bkey)
             for i in range(0, len(q), self.max_batch):
@@ -406,13 +487,73 @@ class ClusterServeEngine:
     def take(self, req_id: int) -> ServeResult:
         return self._results.pop(req_id)
 
+    # ------------------------------------------------------------ deadlines
+
+    def _degrade_level(self, elapsed: float) -> int:
+        """0 = full solve, 1 = schedule-tail-only (p=2 eigensolve + one
+        tail step), 2 = p=2-init labels (classical spectral, no
+        continuation) — degrade instead of missing the deadline."""
+        if self.deadline_s is None:
+            return 0
+        if elapsed >= self.deadline_s:
+            return 2
+        if elapsed >= self.tail_frac * self.deadline_s:
+            return 1
+        return 0
+
+    def _apply_deadlines(self, now: float) -> None:
+        """Move deadline-pressed cold bucket requests to the solo lane
+        with their degrade level pinned (a degraded solve has a
+        different schedule, so it can't share the bucket's trace)."""
+        if self.deadline_s is None:
+            return
+        for bkey in list(self._buckets):
+            keep: List[_Pending] = []
+            for pend in self._buckets[bkey]:
+                lvl = self._degrade_level(now - pend.arrival)
+                if lvl > 0 and pend.mode == "cold" and not pend.churn:
+                    pend.degrade = lvl
+                    pend.spec = None
+                    self._solo.append(pend)
+                else:
+                    keep.append(pend)
+            if keep:
+                self._buckets[bkey] = keep
+            else:
+                del self._buckets[bkey]
+
     # ------------------------------------------------------------ execution
 
-    def _run_bucket(self, pends: List[_Pending]) -> None:
-        spec = pends[0].spec
+    def _fail(self, pend: _Pending, err, *, kind: str, lane: str) -> None:
+        """Record a structured per-request failure: the request resolves
+        (poll/flush/take all see it) with ``error`` set and no labels —
+        it never poisons its batch neighbors and never enters the
+        cache."""
+        msg = f"{type(err).__name__}: {err}" if isinstance(
+            err, BaseException) else str(err)
+        st = ServeStats(
+            req_id=pend.req_id, n=pend.W.n_rows, nnz=pend.W.nnz, k=pend.k,
+            lane=lane, mode="churn" if pend.churn else pend.mode,
+            cache_tier=pend.cache_tier,
+            bucket=pend.spec.key if pend.spec else None, batch_size=0,
+            queue_s=time.monotonic() - pend.arrival, solve_s=0.0,
+            trace_new=False, p_final=float("nan"), degrade=pend.degrade,
+            failure_kind=kind, error=msg)
+        self._results[pend.req_id] = ServeResult(
+            req_id=pend.req_id, labels=None, U=None, rcut=float("nan"),
+            ncut=float("nan"), stats=st, error=msg)
+        self.stats.n_results += 1
+        self.stats.n_failed += 1
+        self.stats.failures[kind] = self.stats.failures.get(kind, 0) + 1
+
+    def _solve_bucket(self, pends: List[_Pending], spec) -> tuple:
+        """The batched solve itself (no per-request error handling —
+        ``_run_bucket`` owns quarantine)."""
         t0 = time.monotonic()
         solver, key = _bucket_solver(spec, self.cfg)
         n_traces0 = sum(1 for t in registry.SOLVER_TRACES if t == key)
+        if _SOLVE_FAULT is not None:
+            _SOLVE_FAULT(pends)
         batch: BucketBatch = assemble_batch([p.W for p in pends], spec)
         if spec.mode == "warm":
             U0 = pad_embeddings([p.warm_U for p in pends], spec)
@@ -435,57 +576,160 @@ class ClusterServeEngine:
         U = np.asarray(U)
         trace_new = sum(1 for t in registry.SOLVER_TRACES if t == key) \
             > n_traces0
+        return U, trace_new, time.monotonic() - t0
+
+    def _run_bucket(self, pends: List[_Pending]) -> None:
+        spec = pends[0].spec
+        try:
+            U, trace_new, solve_s = self._solve_bucket(pends, spec)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as exc:            # noqa: BLE001 — quarantined
+            if len(pends) == 1:
+                # bisection bottomed out: THIS request is the poison
+                self.stats.n_quarantined += 1
+                self._fail(pends[0], exc, kind=_classify(exc),
+                           lane="bucket")
+                return
+            # a thrown batch solve names no culprit: bisect — survivors
+            # re-run, the poisoned half recurses down to one request
+            self.stats.n_quarantine_splits += 1
+            mid = len(pends) // 2
+            self._run_bucket(pends[:mid])
+            self._run_bucket(pends[mid:])
+            return
         if trace_new:
             self.stats.traces += 1
-        solve_s = time.monotonic() - t0
         self.stats.n_batches += 1
         self.stats.solve_s += solve_s
         p_final = float(registry.p_schedule(self.cfg)[-1])
         for b, pend in enumerate(pends):
             Ub = U[b, :pend.W.n_rows]
+            if not np.isfinite(Ub).all():
+                # vmap lanes are numerically independent, so a NaN here
+                # is THIS request's own divergence (bad weights, solver
+                # blow-up) — quarantine it, neighbors are untouched
+                self.stats.n_quarantined += 1
+                self._fail(pend, "non-finite embedding from the batched "
+                                 "solve (request-local divergence)",
+                           kind="nonfinite_result", lane="bucket")
+                continue
             self._finish(pend, Ub, lane="bucket", batch_size=len(pends),
                          solve_s=solve_s, trace_new=trace_new,
                          p_final=p_final, hierarchy=None)
+
+    def _churn_solve(self, pend: _Pending, cfg) -> tuple:
+        """The churn re-solve with retry-with-backoff: transient faults
+        (a flaky backend, a mid-flight divergence) retry up to
+        ``churn_retries`` times; exhaustion falls back to a cold solve
+        of the edited graph (correct, just slower)."""
+        last = None
+        for attempt in range(self.churn_retries + 1):
+            try:
+                if _CHURN_FAULT is not None:
+                    _CHURN_FAULT(pend, attempt)
+                res, hierarchy, _ = incremental_recluster(
+                    pend.W, pend.touched, pend.pattern_changed,
+                    pend.warm_U, cfg, ml=self.ml,
+                    hierarchy=pend.hierarchy)
+                return res, hierarchy, attempt
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as exc:        # noqa: BLE001 — retried
+                last = exc
+                if attempt < self.churn_retries:
+                    self.stats.n_retried += 1
+                    self._sleep(self.retry_backoff_s * (2.0 ** attempt))
+        # retries exhausted: cold-solve the edited graph from scratch
+        cold = dataclasses.replace(cfg, init_U=None,
+                                   multilevel=self.ml)
+        try:
+            res = _psc.p_spectral_cluster(pend.W, cold)
+        except Exception:
+            raise last if last is not None else RuntimeError(
+                "churn fallback failed")
+        return res, None, self.churn_retries + 1
 
     def _run_solo(self, pend: _Pending) -> None:
         t0 = time.monotonic()
         self.stats.n_solo += 1
         cfg = dataclasses.replace(self.cfg, k=pend.k)
         hierarchy = None
-        if pend.churn and pend.warm_U is not None:
-            res, hierarchy, _ = incremental_recluster(
-                pend.W, pend.touched, pend.pattern_changed, pend.warm_U,
-                cfg, ml=self.ml, hierarchy=pend.hierarchy)
-        else:
-            if pend.warm_U is not None:
-                cfg = dataclasses.replace(cfg, init_U=pend.warm_U,
-                                          multilevel=None)
-            elif self.ml is not None:
-                cfg = dataclasses.replace(cfg, multilevel=self.ml)
-            res = _psc.p_spectral_cluster(pend.W, cfg)
-            if self.ml is not None and pend.warm_U is None:
-                # keep the hierarchy for future churn ticks
-                from repro.multilevel import build_hierarchy
-                from repro.multilevel.vcycle import _layout_kwargs
-                hierarchy = build_hierarchy(
-                    pend.W, coarse_size=self.ml.coarse_size,
-                    max_levels=self.ml.max_levels,
-                    min_reduction=self.ml.min_reduction,
-                    rounds=self.ml.match_rounds,
-                    layout_kwargs=_layout_kwargs(cfg),
-                    sparsify=self.ml.sparsify,
-                    max_agg=self.ml.match_max_agg)
+        retries = 0
+        if self.deadline_s is not None and not pend.churn \
+                and pend.mode == "cold":
+            pend.degrade = max(pend.degrade,
+                               self._degrade_level(t0 - pend.arrival))
+        try:
+            if pend.churn and pend.warm_U is not None:
+                res, hierarchy, retries = self._churn_solve(pend, cfg)
+            elif pend.degrade == 2:
+                # level 2: p=2-init labels — one eigensolve, no descent
+                from repro.core import lobpcg
+
+                _, U0 = lobpcg.smallest_eigvecs(
+                    pend.W, pend.k, normalized=cfg.normalized_init,
+                    seed=cfg.seed)
+                self.stats.n_degraded += 1
+                solve_s = time.monotonic() - t0
+                self.stats.solve_s += solve_s
+                self._finish(pend, np.asarray(jnp.linalg.qr(U0)[0]),
+                             lane="solo", batch_size=1, solve_s=solve_s,
+                             trace_new=False, p_final=2.0, hierarchy=None)
+                return
+            else:
+                if pend.degrade == 1:
+                    # level 1: schedule tail only — p=2 eigensolve in,
+                    # one warm step at p_target out
+                    from repro.core import lobpcg
+
+                    _, U0 = lobpcg.smallest_eigvecs(
+                        pend.W, pend.k, normalized=cfg.normalized_init,
+                        seed=cfg.seed)
+                    cfg = dataclasses.replace(
+                        cfg, init_U=np.asarray(jnp.linalg.qr(U0)[0]),
+                        warm_p_steps=1, multilevel=None)
+                    self.stats.n_degraded += 1
+                elif pend.warm_U is not None:
+                    cfg = dataclasses.replace(cfg, init_U=pend.warm_U,
+                                              multilevel=None)
+                elif self.ml is not None:
+                    cfg = dataclasses.replace(cfg, multilevel=self.ml)
+                res = _psc.p_spectral_cluster(pend.W, cfg)
+                if self.ml is not None and pend.warm_U is None \
+                        and pend.degrade == 0:
+                    # keep the hierarchy for future churn ticks
+                    from repro.multilevel import build_hierarchy
+                    from repro.multilevel.vcycle import _layout_kwargs
+                    hierarchy = build_hierarchy(
+                        pend.W, coarse_size=self.ml.coarse_size,
+                        max_levels=self.ml.max_levels,
+                        min_reduction=self.ml.min_reduction,
+                        rounds=self.ml.match_rounds,
+                        layout_kwargs=_layout_kwargs(cfg),
+                        sparsify=self.ml.sparsify,
+                        max_agg=self.ml.match_max_agg)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as exc:            # noqa: BLE001 — isolated
+            self._fail(pend, exc, kind=_classify(exc), lane="solo")
+            return
+        if not np.isfinite(np.asarray(res.U)).all():
+            self._fail(pend, "non-finite embedding from the solo solve",
+                       kind="nonfinite_result", lane="solo")
+            return
         solve_s = time.monotonic() - t0
         self.stats.solve_s += solve_s
         p_final = res.p_path[-1] if res.p_path else \
             float(registry.p_schedule(self.cfg)[-1])
         self._finish(pend, np.asarray(res.U), lane="solo", batch_size=1,
                      solve_s=solve_s, trace_new=False, p_final=p_final,
-                     hierarchy=hierarchy, precomputed=res)
+                     hierarchy=hierarchy, precomputed=res, retries=retries)
 
     def _finish(self, pend: _Pending, U: np.ndarray, *, lane: str,
                 batch_size: int, solve_s: float, trace_new: bool,
-                p_final: float, hierarchy, precomputed=None) -> None:
+                p_final: float, hierarchy, precomputed=None,
+                retries: int = 0) -> None:
         """Stage 3 + metrics on the caller's original graph, cache
         store, stats."""
         W, k = pend.W, pend.k
@@ -510,7 +754,8 @@ class ClusterServeEngine:
             cache_tier=pend.cache_tier,
             bucket=pend.spec.key if pend.spec else None,
             batch_size=batch_size, queue_s=done - pend.arrival - solve_s,
-            solve_s=solve_s, trace_new=trace_new, p_final=p_final)
+            solve_s=solve_s, trace_new=trace_new, p_final=p_final,
+            degrade=pend.degrade, retries=retries)
         self._results[pend.req_id] = ServeResult(
             req_id=pend.req_id, labels=labels, U=np.asarray(U), rcut=rcut,
             ncut=ncut, stats=st)

@@ -63,6 +63,7 @@ class WarmCache:
         self.hits_pattern = 0
         self.misses = 0
         self.evictions = 0
+        self.rejects = 0        # poisoned entries refused on insert
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -97,6 +98,14 @@ class WarmCache:
         return None, None
 
     def store(self, entry: CacheEntry) -> None:
+        # poisoning guard (DESIGN.md §9): a NaN/Inf embedding — e.g.
+        # from a diverged solve — must never be handed out as a warm
+        # start; it would NaN the warm step of every future tenant of
+        # this fingerprint.  Refuse the insert, keep any prior healthy
+        # entry.
+        if entry.U is None or not np.isfinite(entry.U).all():
+            self.rejects += 1
+            return
         fp = entry.fingerprint
         self._lru[fp.key] = entry
         self._lru.move_to_end(fp.key)
@@ -112,4 +121,5 @@ class WarmCache:
         return {"size": len(self._lru), "capacity": self.capacity,
                 "hits_exact": self.hits_exact,
                 "hits_pattern": self.hits_pattern,
-                "misses": self.misses, "evictions": self.evictions}
+                "misses": self.misses, "evictions": self.evictions,
+                "rejects": self.rejects}

@@ -1,0 +1,19 @@
+"""repro.testing — deterministic fault injection for the chaos suite
+(DESIGN.md §9).  Production code never imports this package."""
+from repro.testing.faultinject import (
+    InjectionLog,
+    backend_fault,
+    chaos_seed,
+    halo_corruption,
+    nan_in_multivector,
+    rank_collapse,
+    serve_batch_fault,
+    serve_churn_fault,
+    solver_stall,
+)
+
+__all__ = [
+    "InjectionLog", "backend_fault", "chaos_seed", "halo_corruption",
+    "nan_in_multivector", "rank_collapse", "serve_batch_fault",
+    "serve_churn_fault", "solver_stall",
+]

@@ -1,0 +1,296 @@
+"""Deterministic fault injection for the resilience layer (DESIGN.md §9).
+
+Every injector is a context manager that patches ONE well-defined seam —
+a registered solver driver, a registered grblas backend, the serve
+engine's solve/churn hooks, or the dist halo exchange — and restores it
+on exit.  Faults are counted, not random: ``at_call`` / ``max_calls``
+select exactly which invocations fail, so a chaos test asserts a
+specific recovery-ladder rung fires, not "something eventually broke".
+``CHAOS_SEED`` (env var, see ``chaos_seed``) seeds whatever randomness
+a test adds on top (graph draws, fault placement), keeping the whole
+suite replayable.
+
+Solver injectors patch ``registry._REGISTRY`` entries, which every
+execution path resolves by name at call time (``p_continuation``,
+``warm_start``, the guard's ``_run_levels``), so injected drivers are
+seen by flat, guarded, multilevel and serve paths alike.  The backend
+injector also snapshots and clears the jit trace-memo
+(``registry._TRACE_CACHE``): cached compiled callables would otherwise
+skip dispatch entirely and mask the fault (and entries compiled while
+faulted would bake the failure in), so the cache is emptied on entry
+and the pre-fault snapshot restored on exit.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+from typing import Iterable, List, Optional, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.solvers import registry
+from repro.core.solvers.registry import SolverReport, SolverState
+from repro.grblas import backends as _backends
+from repro.grblas.backends import BackendUnavailableError
+from repro.grblas.semiring import EdgeSemiring, PairEdgeSemiring
+
+
+def chaos_seed(default: int = 0) -> int:
+    """The suite-wide seed: ``CHAOS_SEED`` env var, else ``default``.
+    Chaos tests derive every random draw from it so a failing run
+    reproduces with ``CHAOS_SEED=<n> make test-chaos``."""
+    return int(os.environ.get("CHAOS_SEED", default))
+
+
+@dataclasses.dataclass
+class InjectionLog:
+    """What actually fired: (site, detail) per injected fault.  Tests
+    assert on it so a chaos test that silently injected nothing fails
+    loudly instead of vacuously passing."""
+
+    events: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+
+    def record(self, site: str, detail: str = "") -> None:
+        self.events.append((site, detail))
+
+    def count(self, site: Optional[str] = None) -> int:
+        if site is None:
+            return len(self.events)
+        return sum(1 for s, _ in self.events if s == site)
+
+
+# ------------------------------------------------------------- solver seams
+
+def _names(solvers) -> List[str]:
+    if isinstance(solvers, str):
+        return [solvers]
+    return list(solvers)
+
+
+@contextlib.contextmanager
+def _patched_solvers(names: Iterable[str], wrap):
+    """Swap each named registry entry for ``wrap(original_entry)`` —
+    a (SolverState, call_index) -> SolverReport hook with a per-entry
+    call counter — restoring the originals on exit."""
+    saved = {}
+    counters = {}
+    try:
+        for name in names:
+            orig = registry.resolve_solver(name)
+            saved[name] = orig
+            counters[name] = 0
+
+            def make(orig):
+                def minimize(state: SolverState) -> SolverReport:
+                    counters[orig.name] += 1
+                    return wrap(orig, state, counters[orig.name])
+
+                return minimize
+
+            registry._REGISTRY[name] = dataclasses.replace(
+                orig, minimize_at_p=make(orig))
+        yield
+    finally:
+        for name, orig in saved.items():
+            registry._REGISTRY[name] = orig
+
+
+@contextlib.contextmanager
+def nan_in_multivector(solvers="newton", *, at_call: int = 1,
+                       max_calls: Optional[int] = 1,
+                       log: Optional[InjectionLog] = None):
+    """The named driver(s) return a NaN-poisoned multivector (and NaN
+    fval) starting at their ``at_call``-th invocation, for ``max_calls``
+    invocations (None = forever) — the blown-up-iterate failure mode.
+    Calls outside the window run the real driver."""
+    log = log if log is not None else InjectionLog()
+
+    def wrap(orig, state, call):
+        if call >= at_call and (max_calls is None
+                                or call < at_call + max_calls):
+            log.record("nan_in_multivector", f"{orig.name}@call{call}")
+            U = jnp.full_like(jnp.asarray(state.U), jnp.nan)
+            return SolverReport(U=U, fval=float("nan"), n_apply=0,
+                                iters=0, converged=False)
+        return orig.minimize_at_p(state)
+
+    with _patched_solvers(_names(solvers), wrap):
+        yield log
+
+
+@contextlib.contextmanager
+def solver_stall(solvers="newton", *, at_call: int = 1,
+                 max_calls: Optional[int] = None,
+                 log: Optional[InjectionLog] = None):
+    """The named driver(s) return their input unchanged, unconverged —
+    zero functional progress, the stall failure mode the guard's
+    ``stall_levels`` counter exists for."""
+    from repro.core import plap
+
+    log = log if log is not None else InjectionLog()
+
+    def wrap(orig, state, call):
+        if call >= at_call and (max_calls is None
+                                or call < at_call + max_calls):
+            log.record("solver_stall", f"{orig.name}@call{call}")
+            f = float(plap.value(state.W, jnp.asarray(state.U),
+                                 float(state.p), state.cfg.eps,
+                                 desc=state.cfg.descriptor()))
+            return SolverReport(U=jnp.asarray(state.U), fval=f, n_apply=0,
+                                iters=0, converged=False)
+        return orig.minimize_at_p(state)
+
+    with _patched_solvers(_names(solvers), wrap):
+        yield log
+
+
+@contextlib.contextmanager
+def rank_collapse(solvers="newton", *, at_call: int = 1,
+                  max_calls: Optional[int] = 1,
+                  log: Optional[InjectionLog] = None):
+    """The named driver(s) return an embedding whose last column
+    duplicates the first — numerically rank-deficient, the
+    left-the-Grassmann-chart failure mode."""
+    log = log if log is not None else InjectionLog()
+
+    def wrap(orig, state, call):
+        rep = orig.minimize_at_p(state)
+        if call >= at_call and (max_calls is None
+                                or call < at_call + max_calls):
+            log.record("rank_collapse", f"{orig.name}@call{call}")
+            U = jnp.asarray(rep.U)
+            U = U.at[:, -1].set(U[:, 0])
+            return dataclasses.replace(rep, U=U)
+        return rep
+
+    with _patched_solvers(_names(solvers), wrap):
+        yield log
+
+
+# ------------------------------------------------------------ backend seams
+
+@contextlib.contextmanager
+def backend_fault(backend: str = "sellcs", *, edge_rings_only: bool = True,
+                  log: Optional[InjectionLog] = None):
+    """The named grblas backend raises ``BackendUnavailableError`` from
+    its execute hook — the kernel-went-down failure mode.  With
+    ``edge_rings_only`` (default) plain-semiring ops (the p=2 stage-1
+    matvecs) still work and only the hot loop's edge-semiring ops fail,
+    mirroring a broken Pallas kernel rather than a missing layout.
+
+    The solver trace-memo is cleared for the duration (cached jitted
+    callables would replay around dispatch and mask the fault) and the
+    pre-fault snapshot is restored on exit, discarding anything compiled
+    while the fault was live."""
+    log = log if log is not None else InjectionLog()
+    orig = _backends._REGISTRY[backend]
+    cache_snapshot = dict(registry._TRACE_CACHE)
+    registry._TRACE_CACHE.clear()
+
+    def execute(A, X, ring, desc):
+        if not edge_rings_only or isinstance(ring, (EdgeSemiring,
+                                                    PairEdgeSemiring)):
+            log.record("backend_fault", f"{backend}:{ring.name}")
+            raise BackendUnavailableError(
+                f"injected fault: backend {backend!r} is down "
+                f"(repro.testing.faultinject)")
+        return orig.execute(A, X, ring, desc)
+
+    _backends._REGISTRY[backend] = dataclasses.replace(orig,
+                                                       execute=execute)
+    try:
+        yield log
+    finally:
+        _backends._REGISTRY[backend] = orig
+        registry._TRACE_CACHE.clear()
+        registry._TRACE_CACHE.update(cache_snapshot)
+
+
+# -------------------------------------------------------------- serve seams
+
+@contextlib.contextmanager
+def serve_batch_fault(req_ids, *, exc: Optional[Exception] = None,
+                      log: Optional[InjectionLog] = None):
+    """The serve engine's batched bucket solve raises whenever the batch
+    contains any of ``req_ids`` — the thrown-batch failure mode that
+    exercises quarantine bisection (a NaN lane, by contrast, is caught
+    by the per-lane finiteness check without a throw)."""
+    from repro.serve import psc_engine as _eng
+
+    log = log if log is not None else InjectionLog()
+    bad = set(int(r) for r in np.atleast_1d(req_ids))
+
+    def fault(pends):
+        hit = [p.req_id for p in pends if p.req_id in bad]
+        if hit:
+            log.record("serve_batch_fault", f"req{hit}")
+            raise (exc if exc is not None else
+                   RuntimeError(f"injected batch fault (requests {hit})"))
+
+    prev = _eng._SOLVE_FAULT
+    _eng._SOLVE_FAULT = fault
+    try:
+        yield log
+    finally:
+        _eng._SOLVE_FAULT = prev
+
+
+@contextlib.contextmanager
+def serve_churn_fault(*, fail_attempts: int = 1,
+                      exc: Optional[Exception] = None,
+                      log: Optional[InjectionLog] = None):
+    """The churn re-solve raises on its first ``fail_attempts`` attempts
+    per request — the transient-fault mode the retry-with-backoff path
+    exists for (``fail_attempts > churn_retries`` forces the cold-solve
+    fallback)."""
+    from repro.serve import psc_engine as _eng
+
+    log = log if log is not None else InjectionLog()
+
+    def fault(pend, attempt):
+        if attempt < fail_attempts:
+            log.record("serve_churn_fault",
+                       f"req{pend.req_id}@attempt{attempt}")
+            raise (exc if exc is not None else
+                   RuntimeError(f"injected churn fault (attempt {attempt})"))
+
+    prev = _eng._CHURN_FAULT
+    _eng._CHURN_FAULT = fault
+    try:
+        yield log
+    finally:
+        _eng._CHURN_FAULT = prev
+
+
+# --------------------------------------------------------------- dist seams
+
+@contextlib.contextmanager
+def halo_corruption(mode: str = "nan", *, shard: int = 0,
+                    log: Optional[InjectionLog] = None):
+    """Corrupt the received halo block inside the dist backend's
+    shard-mapped exchange: ``mode="nan"`` poisons the rows received from
+    ``shard`` (a corrupted wire payload), ``mode="drop"`` zeroes them (a
+    dropped shard — the peer never answered).  jnp ops only: the hook
+    runs traced inside shard_map."""
+    from repro.grblas import dist as _dist
+
+    if mode not in ("nan", "drop"):
+        raise ValueError(f"mode must be 'nan' or 'drop', got {mode!r}")
+    log = log if log is not None else InjectionLog()
+    fill = jnp.nan if mode == "nan" else 0.0
+
+    def hook(recv, Ap):
+        log.record("halo_corruption", f"{mode}@shard{shard}")
+        H = Ap.halo_width
+        block = jnp.arange(recv.shape[0]) // max(H, 1)
+        mask = (block == shard)
+        return jnp.where(mask.reshape((-1,) + (1,) * (recv.ndim - 1)),
+                         fill, recv)
+
+    _dist.set_halo_fault_hook(hook)
+    try:
+        yield log
+    finally:
+        _dist.set_halo_fault_hook(None)

@@ -78,12 +78,25 @@ def run_with_restarts(loop_body: Callable[[int, object], object],
                       save_every: int = 100,
                       max_restarts: int = 5,
                       guard: Optional[PreemptionGuard] = None,
-                      on_restore: Optional[Callable] = None):
+                      on_restore: Optional[Callable] = None,
+                      backoff_base: float = 0.01,
+                      backoff_cap: float = 2.0,
+                      sleep_fn: Callable[[float], None] = time.sleep):
     """Run ``state = loop_body(step, state)`` with checkpoint/restart.
 
     loop_body must be side-effect free w.r.t. recovery (all state in
-    ``state``).  Returns (final_step, state, report)."""
-    report = {"restarts": 0, "preempted": False, "saved_at": []}
+    ``state``).  Returns (final_step, state, report); the report
+    records every restart's exception (``errors`` / ``last_error``) and
+    what each retry restored from (``restored_from``: a checkpoint step,
+    or "initial" for the explicit no-checkpoint reset — before the
+    first save a crash rewinds to the CALLER's (start_step, state), not
+    to whatever half-advanced state the failed iteration left behind).
+    Backoff is ``min(backoff_base * 2^restarts, backoff_cap)`` seconds
+    via ``sleep_fn`` (injectable, so tests run deterministic and
+    sleep-free)."""
+    report = {"restarts": 0, "preempted": False, "saved_at": [],
+              "errors": [], "last_error": None, "restored_from": []}
+    state0 = state
     step = start_step
     restarts = 0
     while step < end_step:
@@ -100,16 +113,27 @@ def run_with_restarts(loop_body: Callable[[int, object], object],
                 break
         except KeyboardInterrupt:
             raise
-        except Exception:
+        except Exception as exc:
             restarts += 1
             report["restarts"] = restarts
+            report["errors"].append(f"step {step}: "
+                                    f"{type(exc).__name__}: {exc}")
+            report["last_error"] = exc
             if restarts > max_restarts:
                 raise
-            time.sleep(min(2.0 ** restarts * 0.01, 2.0))
+            sleep_fn(min(backoff_base * 2.0 ** restarts, backoff_cap))
             latest = manager.latest()
             if latest is not None:
                 state, _ = manager.restore(latest, state)
                 step = latest
-                if on_restore is not None:
-                    state = on_restore(state)
+                report["restored_from"].append(latest)
+            else:
+                # no checkpoint exists yet: the retry must not continue
+                # from the possibly-corrupt mid-crash state — reset
+                # explicitly to the caller's initial (step, state)
+                state = state0
+                step = start_step
+                report["restored_from"].append("initial")
+            if on_restore is not None:
+                state = on_restore(state)
     return step, state, report

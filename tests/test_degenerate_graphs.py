@@ -1,0 +1,259 @@
+"""Degenerate inputs end to end: empty/tiny/disconnected/duplicated
+graphs and degenerate k, through the flat, multilevel and serve paths,
+plus the graphs.validate admission layer (DESIGN.md §9)."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core.psc import PSCConfig, p_spectral_cluster
+from repro.graphs import (GraphValidationError, ValidateConfig, allocate_k,
+                          connected_components, isolated_vertices,
+                          quick_check, ring_of_cliques, validate_graph)
+from repro.grblas.containers import SparseMatrix
+from repro.multilevel.vcycle import MultilevelConfig
+from repro.serve.psc_engine import ClusterServeEngine
+
+
+def _sym(pairs, n, w=1.0):
+    r = [a for a, b in pairs] + [b for a, b in pairs]
+    c = [b for a, b in pairs] + [a for a, b in pairs]
+    return SparseMatrix.from_coo(np.array(r), np.array(c),
+                                 np.full(len(r), w), (n, n))
+
+
+def _clique(lo, hi):
+    return [(i, j) for i in range(lo, hi) for j in range(i + 1, hi)]
+
+
+def _same_partition(a, b):
+    """Label arrays agree up to renaming of cluster ids."""
+    a, b = np.asarray(a), np.asarray(b)
+    return len(set(zip(a.tolist(), b.tolist()))) == len(set(a.tolist())) \
+        == len(set(b.tolist()))
+
+
+EMPTY = dict(rows=np.array([], np.int64), cols=np.array([], np.int64),
+             vals=np.array([], np.float64))
+
+
+# ---------------------------------------------------------------- tiny / k
+
+def test_empty_graph_raises_actionable():
+    W = SparseMatrix.from_coo(shape=(0, 0), **EMPTY)
+    with pytest.raises(ValueError, match="empty graph"):
+        p_spectral_cluster(W, PSCConfig(k=1))
+
+
+def test_k_out_of_range():
+    W = _sym([(0, 1)], 2)
+    with pytest.raises(ValueError, match="k="):
+        PSCConfig(k=0)
+    with pytest.raises(ValueError, match="exceeds the number of vertices"):
+        p_spectral_cluster(W, PSCConfig(k=3))
+
+
+def test_single_edge_graph():
+    W = _sym([(0, 1)], 2)
+    r1 = p_spectral_cluster(W, PSCConfig(k=1))
+    np.testing.assert_array_equal(r1.labels, [0, 0])
+    assert r1.rcut == 0.0
+    r2 = p_spectral_cluster(W, PSCConfig(k=2))       # k == n
+    assert sorted(r2.labels.tolist()) == [0, 1]
+    assert r2.rcut == pytest.approx(2.0)
+    np.testing.assert_array_equal(np.asarray(r2.U), np.eye(2))
+
+
+def test_k_equals_one_is_closed_form():
+    W, _ = _two_cliques()
+    res = p_spectral_cluster(W, PSCConfig(k=1))
+    assert (res.labels == 0).all()
+    assert res.rcut == 0.0
+    assert res.p_path == [] and res.reports == []
+    np.testing.assert_allclose(np.asarray(res.U),
+                               1.0 / np.sqrt(W.n_rows), rtol=1e-6)
+
+
+def test_k_equals_n_is_closed_form():
+    W = _sym(_clique(0, 5), 5)
+    res = p_spectral_cluster(W, PSCConfig(k=5))
+    np.testing.assert_array_equal(res.labels, np.arange(5))
+    assert np.isfinite(res.rcut)
+
+
+def test_star_graph_flat_and_guarded():
+    n = 9
+    W = _sym([(0, i) for i in range(1, n)], n)
+    for guard in (None, True):
+        res = p_spectral_cluster(W, PSCConfig(
+            k=2, guard=guard, newton_iters=6, tcg_iters=4))
+        assert np.isfinite(res.rcut)
+        assert len(set(res.labels.tolist())) == 2
+        if guard:
+            assert res.recovery.clean
+
+
+# ------------------------------------------------------------- disconnected
+
+def _two_cliques():
+    """10-clique + 14-clique, no edges between them."""
+    return _sym(_clique(0, 10) + _clique(10, 24), 24), (10, 14)
+
+
+def test_disconnected_components_detected():
+    W, sizes = _two_cliques()
+    comps = connected_components(W)
+    assert comps.n_components == 2
+    assert sorted(comps.sizes.tolist()) == sorted(sizes)
+    assert isolated_vertices(W).size == 0
+
+
+def test_disconnected_cliques_cluster_per_component():
+    W, _ = _two_cliques()
+    res = p_spectral_cluster(W, PSCConfig(k=2, validate=True))
+    # each clique is one cluster: a disconnected graph's optimal 2-cut
+    # cuts nothing
+    assert res.rcut == 0.0
+    assert len(res.components) == 2
+    labels = np.asarray(res.labels)
+    assert len(set(labels[:10].tolist())) == 1
+    assert len(set(labels[10:].tolist())) == 1
+    assert labels[0] != labels[10]
+
+
+def test_disconnected_cliques_k4_allocates_proportionally():
+    W, _ = _two_cliques()
+    res = p_spectral_cluster(W, PSCConfig(
+        k=4, validate=True, newton_iters=6, tcg_iters=4))
+    assert len(set(res.labels.tolist())) == 4
+    assert np.isfinite(res.rcut)
+    assert [c["k"] for c in res.components] == [2, 2]
+    # no cluster spans components
+    labels = np.asarray(res.labels)
+    assert not (set(labels[:10].tolist()) & set(labels[10:].tolist()))
+
+
+def test_k_below_component_count_is_actionable():
+    W = _sym(_clique(0, 4) + _clique(4, 8) + _clique(8, 12), 12)
+    with pytest.raises(ValueError, match="raise k"):
+        p_spectral_cluster(W, PSCConfig(k=2, validate=True))
+
+
+def test_self_loops_only_graph():
+    n = 4
+    W = SparseMatrix.from_coo(np.arange(n), np.arange(n),
+                              np.ones(n), (n, n))
+    assert isolated_vertices(W).size == n
+    assert connected_components(W).n_components == n
+    with pytest.raises(ValueError, match="isolated"):
+        p_spectral_cluster(W, PSCConfig(k=2, validate=True))
+    # k == n still answers in closed form
+    res = p_spectral_cluster(W, PSCConfig(k=n, validate=True))
+    np.testing.assert_array_equal(res.labels, np.arange(n))
+
+
+def test_allocate_k_proportional_with_floor_and_cap():
+    np.testing.assert_array_equal(allocate_k(np.array([10, 14]), 4), [2, 2])
+    np.testing.assert_array_equal(allocate_k(np.array([30, 3]), 4), [3, 1])
+    np.testing.assert_array_equal(allocate_k(np.array([5, 1]), 4), [3, 1])
+    np.testing.assert_array_equal(allocate_k(np.array([2, 2]), 4), [2, 2])
+    with pytest.raises(ValueError, match="raise k"):
+        allocate_k(np.array([3, 3, 3]), 2)
+    with pytest.raises(ValueError):
+        allocate_k(np.array([2, 2]), 5)
+
+
+# ---------------------------------------------------------- duplicate edges
+
+def test_duplicate_coo_entries_flat_and_multilevel():
+    """Duplicate COO entries accumulate in the SpMV — the graph behaves
+    as the summed-weight graph, and every path returns the same
+    partition as the deduplicated build."""
+    W1, truth = ring_of_cliques(4, 6)
+    r, c, v = W1.host_coo()
+    Wdup = SparseMatrix.from_coo(np.concatenate([r, r]),
+                                 np.concatenate([c, c]),
+                                 np.concatenate([v, v]),
+                                 (W1.n_rows, W1.n_rows))
+    assert Wdup.nnz == 2 * W1.nnz
+    cfg = PSCConfig(k=4, newton_iters=6, tcg_iters=4)
+    ref = p_spectral_cluster(W1, cfg)
+    dup = p_spectral_cluster(Wdup, cfg)
+    assert _same_partition(ref.labels, dup.labels)
+    ml = p_spectral_cluster(Wdup, PSCConfig(
+        k=4, newton_iters=6, tcg_iters=4,
+        multilevel=MultilevelConfig(coarse_size=12)))
+    assert np.isfinite(ml.rcut)
+    assert len(set(ml.labels.tolist())) == 4
+
+
+def test_trivial_k_short_circuits_multilevel():
+    W, _ = ring_of_cliques(4, 6)
+    res = p_spectral_cluster(W, PSCConfig(
+        k=1, multilevel=MultilevelConfig(coarse_size=8)))
+    assert (res.labels == 0).all()
+    assert res.levels is None and res.p_path == []
+
+
+# ------------------------------------------------------------- validate unit
+
+def test_validate_rejects_nonfinite_with_hint():
+    W, _ = _two_cliques()
+    r, c, v = W.host_coo()
+    v = np.array(v)
+    v[5] = np.nan
+    bad = SparseMatrix.from_coo(r, c, v, (24, 24))
+    assert quick_check(bad) is not None
+    with pytest.raises(GraphValidationError, match="repair=True") as ei:
+        validate_graph(bad)
+    assert any("non-finite" in i for i in ei.value.issues)
+
+
+def test_validate_repairs_nonfinite_and_negative():
+    W, _ = _two_cliques()
+    r, c, v = W.host_coo()
+    v = np.array(v)
+    v[5] = np.inf
+    v[7] = -3.0
+    bad = SparseMatrix.from_coo(r, c, v, (24, 24))
+    fixed = validate_graph(bad, ValidateConfig(repair=True))
+    fv = np.asarray(fixed.vals)
+    assert np.isfinite(fv).all() and (fv > 0).all()
+    # repair re-symmetrizes: dropping one direction of an edge must not
+    # leave its mirror behind
+    rr, cc, _ = fixed.host_coo()
+    assert set(zip(rr.tolist(), cc.tolist())) == \
+        set(zip(cc.tolist(), rr.tolist()))
+
+
+def test_validate_repairs_asymmetry():
+    W = SparseMatrix.from_coo(np.array([0, 1, 2]), np.array([1, 2, 0]),
+                              np.array([1.0, 2.0, 3.0]), (3, 3))
+    with pytest.raises(GraphValidationError, match="asym"):
+        validate_graph(W)
+    fixed = validate_graph(W, ValidateConfig(repair=True))
+    assert fixed.nnz == 6
+    rr, cc, vv = fixed.host_coo()
+    d = {(int(a), int(b)): float(x) for a, b, x in zip(rr, cc, vv)}
+    assert d[(0, 1)] == d[(1, 0)] == 1.0
+
+
+# -------------------------------------------------------------------- serve
+
+def test_serve_tiny_and_degenerate_k():
+    cfg = PSCConfig(k=2, newton_iters=6, tcg_iters=4)
+    eng = ClusterServeEngine(cfg)
+    W2 = _sym([(0, 1)], 2)
+    Wstar = _sym([(0, i) for i in range(1, 9)], 9)
+    rid_edge = eng.submit(W2)                        # k == n -> solo lane
+    rid_one = eng.submit(Wstar, k=1)
+    rid_star = eng.submit(Wstar)
+    done = eng.flush()
+    assert done[rid_edge].ok
+    assert sorted(done[rid_edge].labels.tolist()) == [0, 1]
+    assert done[rid_edge].stats.lane == "solo"
+    assert done[rid_one].ok and (done[rid_one].labels == 0).all()
+    assert done[rid_star].ok
+    assert len(set(done[rid_star].labels.tolist())) == 2
+    with pytest.raises(ValueError, match="k="):
+        eng.submit(W2, k=5)
+    assert eng.stats.n_failed == 0

@@ -145,3 +145,63 @@ def test_gradient_compression_error_feedback():
     assert q.dtype == jnp.int8
     np.testing.assert_allclose(np.asarray(dequantize_int8(q, s)),
                                np.asarray(g["w"]), atol=float(s) + 1e-6)
+
+
+def test_run_with_restarts_resets_to_initial_without_checkpoint(tmp_path):
+    """A crash before the first save must rewind to the CALLER's
+    (start_step, state), not continue from the half-advanced loop state
+    — and the report must surface every exception."""
+    mgr = CheckpointManager(tmp_path, keep=3)
+    crashes = {"left": 2}
+    starts = []
+
+    def body(step, state):
+        if step == 0:
+            starts.append(float(state["x"]))
+        if step == 1 and crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise RuntimeError("boom before any checkpoint")
+        return {"x": state["x"] + 1}
+
+    sleeps = []
+    final_step, state, report = run_with_restarts(
+        body, {"x": jnp.zeros(())}, mgr, start_step=0, end_step=4,
+        save_every=100, max_restarts=5, sleep_fn=sleeps.append)
+    assert final_step == 4 and float(state["x"]) == 4.0
+    assert starts == [0.0, 0.0, 0.0]        # every retry from the initial
+    assert report["restored_from"] == ["initial", "initial"]
+    assert len(report["errors"]) == 2
+    assert all("RuntimeError: boom" in e for e in report["errors"])
+    assert isinstance(report["last_error"], RuntimeError)
+    assert sleeps == [0.02, 0.04]           # base * 2^restarts, injectable
+
+
+def test_run_with_restarts_backoff_is_capped(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    crashes = {"left": 4}
+
+    def body(step, state):
+        if crashes["left"] > 0:
+            crashes["left"] -= 1
+            raise ValueError("flaky")
+        return {"x": state["x"] + 1}
+
+    sleeps = []
+    _, _, report = run_with_restarts(
+        body, {"x": jnp.zeros(())}, mgr, start_step=0, end_step=1,
+        max_restarts=10, backoff_base=0.5, backoff_cap=1.0,
+        sleep_fn=sleeps.append)
+    assert sleeps == [1.0, 1.0, 1.0, 1.0]   # capped
+    assert report["restarts"] == 4 and report["last_error"] is not None
+
+
+def test_run_with_restarts_exhaustion_reraises(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+
+    def body(step, state):
+        raise RuntimeError("permanent failure")
+
+    with pytest.raises(RuntimeError, match="permanent failure"):
+        run_with_restarts(body, {"x": jnp.zeros(())}, mgr,
+                          start_step=0, end_step=4, max_restarts=2,
+                          sleep_fn=lambda s: None)

@@ -67,7 +67,8 @@ def test_cache_hit_miss_evict_lru():
     assert cache.lookup(fb) == (None, None)
     st = cache.stats()
     assert st == {"size": 2, "capacity": 2, "hits_exact": 1,
-                  "hits_pattern": 0, "misses": 2, "evictions": 1}
+                  "hits_pattern": 0, "misses": 2, "evictions": 1,
+                  "rejects": 0}
 
 
 def test_cache_pattern_tier_and_stale_index():
@@ -229,3 +230,22 @@ def test_warm_start_config_on_flat_pipeline():
     assert warm.reports is not None and len(warm.reports) >= 1
     assert cold.reports is not None and len(cold.reports) == \
         len(cold.p_path)
+
+
+def test_store_rejects_poisoned_entry():
+    """Poisoning guard (DESIGN.md §9): a NaN/Inf embedding never enters
+    the cache — the prior healthy entry for the fingerprint survives."""
+    cache = WarmCache(capacity=4)
+    fp = _graph().fingerprint(1e-6)
+    good = _entry(fp, tag=1.0)
+    cache.store(good)
+    cache.store(_entry(fp, tag=np.nan))
+    cache.store(_entry(fp, tag=np.inf))
+    cache.store(CacheEntry(U=None, labels=np.zeros(12, np.int64),
+                           p_final=1.2, rcut=1.0, fingerprint=fp))
+    assert cache.stats()["rejects"] == 3
+    assert fp in cache
+    np.testing.assert_array_equal(cache.peek(fp).U, good.U)
+    # a fresh healthy entry still replaces normally
+    cache.store(_entry(fp, tag=2.0))
+    assert float(cache.peek(fp).U[0, 0]) == 2.0

@@ -1,8 +1,9 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test test-dist test-serve test-chaos dryrun-smoke \
-	bench-kernels bench-multilevel bench-dist bench-solvers bench-serve
+.PHONY: verify imports test test-dist test-serve test-chaos test-obs \
+	dryrun-smoke bench-kernels bench-multilevel bench-dist bench-solvers \
+	bench-serve
 
 # Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
 verify: imports test
@@ -63,6 +64,13 @@ test-serve:
 # `CHAOS_SEED=<n> make test-chaos` replays a specific draw.
 test-chaos:
 	$(PY) -m pytest -x -q tests/test_chaos.py tests/test_degenerate_graphs.py
+
+# Telemetry layer by name (DESIGN.md §10): span recorder semantics +
+# Chrome/JSONL export round-trips, metrics snapshot/delta/exposition,
+# the retrace detector, the <=2% disabled-tracing overhead bound, and
+# the rung-counter exactly-once contract.
+test-obs:
+	$(PY) -m pytest -x -q tests/test_obs.py
 
 # Regenerates the committed BENCH_serve.json: one trace per bucket over
 # a mixed stream, warm >= 3x cold at equal RCut, incremental churn

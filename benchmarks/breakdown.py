@@ -4,16 +4,17 @@ pipeline — p=2 eigenvectors (LOBPCG SpMM-bound), Grassmann continuation
 
 The paper reports that only the GraphBLAS components scale; this
 breakdown shows where the time goes so Fig-1's scaling projection can
-be applied per component."""
+be applied per component.
+
+Since the telemetry layer (DESIGN.md §10) the numbers come straight
+from the pipeline's own spans: one traced ``p_spectral_cluster`` call,
+then ``PSCResult.telemetry.phase_breakdown()`` — no hand-rolled timers
+re-implementing the pipeline stage by stage, so the breakdown can never
+drift from what the production path actually runs.
+"""
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import lobpcg, kmeans as km, metrics, solvers
-from repro.core.psc import PSCConfig
+from repro.core.psc import PSCConfig, p_spectral_cluster
 from repro.graphs import delaunay_graph
 
 K = 4
@@ -22,35 +23,21 @@ K = 4
 def run(r=11):
     W, _ = delaunay_graph(r, seed=0)
     cfg = PSCConfig(k=K, p_target=1.3, newton_iters=15, tcg_iters=10,
-                    kmeans_restarts=4, seed=0)
-
-    t0 = time.time()
-    _, U = lobpcg.smallest_eigvecs(W, K, seed=0)
-    U = jnp.linalg.qr(U)[0]
-    jax.block_until_ready(U)
-    t_eig = time.time() - t0
-
-    t0 = time.time()
-    n_hvp = 0
-    for p in solvers.p_schedule(cfg):
-        res = solvers.minimize_at_p(W, U, p, cfg)
-        U = res.U
-        n_hvp += int(res.n_apply)
-    jax.block_until_ready(U)
-    t_cont = time.time() - t0
-
-    t0 = time.time()
-    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
-    labels, _ = km.kmeans(jax.random.PRNGKey(0), Xn, K,
-                          restarts=cfg.kmeans_restarts)
-    jax.block_until_ready(labels)
-    t_km = time.time() - t0
-
-    total = t_eig + t_cont + t_km
+                    kmeans_restarts=4, seed=0, trace=True)
+    res = p_spectral_cluster(W, cfg)
+    tel = res.telemetry
+    phases = tel.phase_breakdown()          # {"init", "continuation", "kmeans"}
+    total = tel.total_s()
+    n_hvp = sum(int(s.attrs.get("n_apply", 0))
+                for s in tel.spans if s.name == "solver.level")
+    t_eig = phases.get("init", 0.0)
+    t_cont = phases.get("continuation", 0.0)
+    t_km = phases.get("kmeans", 0.0)
     return {"r": r, "total_s": total, "t_eig_s": t_eig, "t_cont_s": t_cont,
             "t_kmeans_s": t_km, "n_hvp": n_hvp,
             "grb_pct": 100 * (t_eig + t_cont) / total,
-            "rcut": float(metrics.rcut(W, labels, K))}
+            "coverage": tel.coverage(),
+            "rcut": res.rcut}
 
 
 def main(csv=True):
@@ -63,7 +50,8 @@ def main(csv=True):
         f"breakdown_del{row['r']}_kmeans,{row['t_kmeans_s']*1e6:.0f},"
         f"share={100*row['t_kmeans_s']/row['total_s']:.0f}%",
         f"breakdown_del{row['r']}_total,{row['total_s']*1e6:.0f},"
-        f"grb_components={row['grb_pct']:.0f}%",
+        f"grb_components={row['grb_pct']:.0f}%_coverage="
+        f"{100*row['coverage']:.0f}%",
     ]
     if csv:
         for line in lines:

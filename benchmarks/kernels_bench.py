@@ -71,6 +71,12 @@ def sweep_backends(r=10, k=4, out_path=None):
         ("plap_edge", "edge_ref", Descriptor(backend="edge_pallas")),
     ]
     entries = []
+    # minimum-traffic byte model of one SpMM (same model the grblas
+    # dispatch spans attach — obs.trace.roofline_summary uses it): the
+    # achieved-GB/s column turns wall_us into roofline fractions
+    from repro.grblas.api import _traffic_bytes
+
+    nbytes = _traffic_bytes(W, k)
     for ring_name, label, desc in cases:
         rg = ring if ring_name == "plap_edge" else None
         if rg is None:
@@ -80,9 +86,13 @@ def sweep_backends(r=10, k=4, out_path=None):
         reps = 2 if "interpret" in label else 5
         us = _time(fn, X, reps=reps)
         entries.append({"ring": ring_name, "backend": label,
-                        "wall_us": round(us, 1)})
+                        "wall_us": round(us, 1),
+                        "achieved_gb_s": round(nbytes / (us * 1e-6) / 1e9,
+                                               3)})
     payload = {
+        "schema": 2,
         "graph": f"delaunay_r{r}", "n": W.n_rows, "nnz": W.nnz, "k": k,
+        "traffic_bytes_per_spmm": int(nbytes),
         "bsr_fill_ratio": round(W.bsr_fill_ratio(), 2),
         "ell_fill_ratio": round(W.ell_fill_ratio(), 2),
         "sellcs_fill_ratio": round(W.sellcs_fill_ratio(), 2),
@@ -126,7 +136,8 @@ def sweep_sellcs(k=4, out_path=None, reps=20):
         ("sbm_skew", _skewed_sbm(seed=0)),
         ("delaunay_r13", delaunay_graph(13, seed=0)[0]),
     ]
-    payload = {"platform": jax.default_backend(), "k": k, "graphs": []}
+    payload = {"schema": 2, "platform": jax.default_backend(), "k": k,
+               "graphs": []}
     for name, W in graphs:
         X = jnp.asarray(rng.standard_normal((W.n_rows, k)), jnp.float32)
         entry = {
@@ -213,7 +224,8 @@ def sweep_dist(out_path=None, shards=(4, 8), ks=(1, 8, 16, 32), reps=16):
         ("sbm4_65k", Wsbm, truth),
         ("delaunay_r15", Wdel, None),
     ]
-    payload = {"platform": jax.default_backend(), "n_devices": n_dev,
+    payload = {"schema": 2,
+               "platform": jax.default_backend(), "n_devices": n_dev,
                "halo_note": "wire bytes analytic per call; self-chunks and "
                             "own shards excluded on both schedules",
                "graphs": []}
@@ -303,7 +315,14 @@ def sweep_multilevel(out_path=None, k=4, seed=0):
     from repro.multilevel import MultilevelConfig
 
     base = PSCConfig(k=k, p_target=1.4, newton_iters=15, tcg_iters=12,
-                     kmeans_restarts=4, seed=seed)
+                     kmeans_restarts=4, seed=seed, trace=True)
+
+    def _phases(res):
+        tel = res.telemetry
+        if tel is None:
+            return None
+        return {name: round(sec, 3)
+                for name, sec in sorted(tel.phase_breakdown().items())}
     graphs = [
         ("delaunay_r17", lambda: delaunay_graph(17, seed=seed)[0], (3, 12)),
         # weighted planted partition (w_in > w_out, similarity-graph
@@ -319,7 +338,7 @@ def sweep_multilevel(out_path=None, k=4, seed=0):
             seed=seed)[0], (3, 12)),
         ("delaunay_r19", lambda: delaunay_graph(19, seed=seed)[0], (12,)),
     ]
-    payload = {"platform": jax.default_backend(), "k": k,
+    payload = {"schema": 2, "platform": jax.default_backend(), "k": k,
                "config": {"p_target": base.p_target,
                           "newton_iters": base.newton_iters,
                           "tcg_iters": base.tcg_iters}, "graphs": []}
@@ -331,7 +350,8 @@ def sweep_multilevel(out_path=None, k=4, seed=0):
         entry = {
             "graph": name, "n": W.n_rows, "nnz": W.nnz,
             "flat": {"rcut": float(rf.rcut), "wall_s": round(t_flat, 2),
-                     "init_rcut": float(rf.init_rcut)},
+                     "init_rcut": float(rf.init_rcut),
+                     "phase_s": _phases(rf)},
             "vcycle": [],
         }
         for depth in depths:
@@ -345,6 +365,7 @@ def sweep_multilevel(out_path=None, k=4, seed=0):
             entry["vcycle"].append({
                 "max_levels": depth, "hierarchy_levels": n_levels,
                 "levels_refined": len({r["level"] for r in recs}),
+                "phase_s": _phases(rm),
                 "rcut": float(rm.rcut), "wall_s": round(t_ml, 2),
                 "speedup_vs_flat": round(t_flat / t_ml, 2),
                 "rcut_gap_pct": round(
@@ -383,7 +404,8 @@ def sweep_solvers(out_path=None, k=4, seed=0):
         ("blobs4_480", lambda: gaussian_blobs_knn(120, k, seed=1)[:2]),
         ("delaunay_r10", lambda: (delaunay_graph(10, seed=seed)[0], None)),
     ]
-    payload = {"platform": jax.default_backend(), "k": k, "entries": []}
+    payload = {"schema": 2, "platform": jax.default_backend(), "k": k,
+               "entries": []}
     for name, make in graphs:
         W, truth = make()
         for p_target in (1.4, 1.1, 1.0):
@@ -392,13 +414,18 @@ def sweep_solvers(out_path=None, k=4, seed=0):
                     continue        # p=1 is outside newton/scf's open range
                 cfg = PSCConfig(k=k, p_target=p_target, newton_iters=15,
                                 tcg_iters=10, kmeans_restarts=4, seed=seed,
-                                solver=solver, scf_sweeps=10, ipm_iters=100)
+                                solver=solver, scf_sweeps=10, ipm_iters=100,
+                                trace=True)
                 t0 = time.time()
                 res = p_spectral_cluster(W, cfg)
                 wall = time.time() - t0
+                tel = res.telemetry
                 row = {"graph": name, "n": W.n_rows, "nnz": W.nnz,
                        "p_target": p_target, "solver": solver,
                        "wall_s": round(wall, 2),
+                       "phase_s": None if tel is None else
+                       {ph: round(sec, 3) for ph, sec
+                        in sorted(tel.phase_breakdown().items())},
                        "rcut": round(float(res.rcut), 5),
                        "n_apply": int(sum(res.hvp_counts))}
                 if truth is not None:

@@ -3,8 +3,10 @@ for the serve engine's three contracts, written to BENCH_serve.json at
 the repo root by ``make bench-serve``.
 
   1. trace economy — a mixed-size stream of >= 20 requests compiles
-     exactly one trace per (bucket, mode) signature, asserted against
-     the solver registry's trace log;
+     exactly one trace per (bucket, mode) signature, asserted through
+     ``repro.obs.retrace.RetraceDetector`` (which reads the solver
+     registry's trace log), with the stream's wall clock broken down
+     by serve-layer spans;
   2. warm >= 3x cold — an exact-tier cache hit (solver re-entry at the
      schedule tail) beats the full cold continuation by >= 3x wall
      clock at equal RCut (within 1%), measured steady-state (traces
@@ -28,6 +30,8 @@ import numpy as np
 from repro.core import PSCConfig
 from repro.core.solvers import registry
 from repro.graphs import ring_of_cliques, sbm_graph
+from repro.obs import TraceConfig, Tracer, use as use_tracer
+from repro.obs.retrace import RetraceDetector
 from repro.serve import ClusterServeEngine, EdgeDelta, apply_edge_delta, \
     bucket_for
 
@@ -65,20 +69,30 @@ def bench_stream(n_requests=24):
     expected = {bucket_for(W, K, "cold").key for W in stream}
 
     eng = ClusterServeEngine(cfg, max_batch=8)
-    before = _serve_traces()
-    results = eng.serve(stream)
-    traces = _serve_traces() - before
+    det = RetraceDetector()
+    tr = Tracer(TraceConfig())
+    with use_tracer(tr):
+        results = eng.serve(stream)
+    # acceptance: exactly one compile per (bucket, solver) memo key —
+    # a second compile of ANY serve key is a retrace and raises
+    per_key = det.serve_buckets()
+    det.assert_at_most(1)
+    traces = sum(per_key.values())
 
     row = {
         "n_requests": len(stream),
         "n_buckets": len(expected),
         "buckets": sorted(str(k) for k in expected),
         "traces_compiled": traces,
+        "compiles_per_bucket": {str(k): v for k, v in per_key.items()},
         "engine_traces": eng.stats.traces,
         "n_batches": eng.stats.n_batches,
         "graphs_per_s": round(eng.stats.graphs_per_s, 2),
         "mean_rcut": round(float(np.mean([r.rcut for r in results])), 4),
-        "one_trace_per_bucket": traces == len(expected),
+        "span_s": {name: round(sec, 4)
+                   for name, sec in sorted(tr.by_name().items())},
+        "one_trace_per_bucket": traces == len(expected)
+        and all(v == 1 for v in per_key.values()),
     }
     assert row["one_trace_per_bucket"], row
     return row
@@ -178,6 +192,7 @@ def bench_churn(frac=0.01):
 def main(out_path=Path("BENCH_serve.json")):
     payload = {
         "bench": "psc_serve_engine",
+        "schema": 2,
         "config": {"k": K, "solver": "newton", "newton_iters": 20,
                    "tcg_iters": 12, "p_target": 1.2},
         "stream": bench_stream(),

@@ -1,0 +1,61 @@
+"""Telemetry walkthrough (DESIGN.md §10): trace a 65k-node multilevel
+p-spectral solve end to end and leave a Perfetto-openable timeline
+behind.
+
+One flag — ``PSCConfig(trace=True)`` — buys the whole story: nested
+spans over coarsening, the coarse solve's per-p continuation levels,
+per-level refinement, kmeans, and every eager GraphBLAS SpMM
+underneath, all host-clocked with ``block_until_ready`` fencing so a
+span's duration is the work it encloses, not dispatch latency.  The
+resulting ``PSCResult.telemetry`` exports Chrome trace-event JSON:
+load ``trace_psc.json`` at https://ui.perfetto.dev (or
+chrome://tracing) to inspect it visually.
+
+The script asserts the ISSUE-9 acceptance bound: the root span's
+direct children must account for >= 90% of its wall clock — if the
+pipeline ever grows an untraced phase, this example fails before the
+trace is written.
+
+    PYTHONPATH=src python examples/trace_psc.py
+"""
+from pathlib import Path
+
+from repro.core import PSCConfig, p_spectral_cluster
+from repro.graphs import delaunay_graph
+from repro.multilevel import MultilevelConfig
+
+OUT = Path(__file__).resolve().parent.parent / "trace_psc.json"
+
+# delaunay_graph(16) is a 65,536-vertex triangulation — big enough that
+# the multilevel V-cycle (coarsen -> coarse continuation -> refine) is
+# the honest serving path, small enough to rerun casually
+print("building delaunay_r16 (65k vertices) ...")
+W, _ = delaunay_graph(16, seed=0)
+cfg = PSCConfig(k=4, p_target=1.4, newton_iters=12, tcg_iters=10,
+                kmeans_restarts=4, seed=0,
+                multilevel=MultilevelConfig(),
+                trace=True)
+
+print(f"clustering n={W.n_rows} nnz={W.nnz} with trace=True ...")
+res = p_spectral_cluster(W, cfg)
+tel = res.telemetry
+
+print(f"\nrcut={res.rcut:.5f}  total={tel.total_s():.2f}s  "
+      f"spans={len(tel.spans)}  events={len(tel.events)}  "
+      f"dropped={tel.dropped}")
+print("\nphase breakdown (depth-1 spans under the root):")
+for name, sec in sorted(tel.phase_breakdown().items(),
+                        key=lambda kv: -kv[1]):
+    print(f"  {name:<28s} {sec:8.3f}s  "
+          f"{100 * sec / tel.total_s():5.1f}%")
+
+cov = tel.coverage()
+print(f"\ncoverage: {100 * cov:.1f}% of the root span's wall clock is "
+      f"accounted for by its direct children")
+assert cov >= 0.9, (
+    f"trace coverage {cov:.3f} < 0.9 — a pipeline phase is running "
+    f"untraced")
+
+tel.write_chrome(OUT)
+print(f"\nwrote {OUT} ({OUT.stat().st_size // 1024} KiB) — open it at "
+      f"https://ui.perfetto.dev")

@@ -45,6 +45,7 @@ from repro.grblas import api as grb_api
 from repro.grblas.api import Descriptor
 from repro.core import plap, kmeans as km, lobpcg, metrics, solvers
 from repro.core.solvers import p_schedule  # re-export (vcycle + benches)
+from repro.obs import trace as _obs_trace
 
 
 @dataclasses.dataclass
@@ -113,8 +114,19 @@ class PSCConfig:
     # before the solve.
     guard: object = None
     validate: object = None
+    # telemetry (DESIGN.md §10): ``trace`` = None/False (off) | True
+    # (default obs.TraceConfig) | an obs.TraceConfig | an obs.Tracer to
+    # record into.  When set, p_spectral_cluster runs under a span
+    # session and attaches an ``obs.Telemetry`` (spans, instants, export
+    # + phase-breakdown helpers) to ``PSCResult.telemetry``.  If a
+    # tracer is already active (an outer session owns the timeline) the
+    # spans flow there instead and ``telemetry`` stays None.
+    trace: object = None
 
     def __post_init__(self):
+        if self.trace is not None \
+                and not isinstance(self.trace, _obs_trace.Tracer):
+            _obs_trace.coerce(self.trace)   # raises on bad values now
         # config-time applicability check: solver name resolves and the
         # whole continuation schedule sits in its supported p range
         solvers.validate_config(self)
@@ -177,6 +189,11 @@ class PSCResult:
     # graph): one summary dict per connected component
     # {"n", "k", "rcut"} in component order (graphs.validate)
     components: Optional[list] = None
+    # traced runs only (PSCConfig.trace, DESIGN.md §10): the
+    # obs.Telemetry of this solve — spans/instants with Chrome-trace and
+    # JSONL export and the per-phase breakdown benchmarks/breakdown.py
+    # renders.  None when tracing is off or an outer session owns it.
+    telemetry: Optional[object] = None
 
 
 def stage_keys(seed: int):
@@ -220,7 +237,25 @@ def _trivial_result(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
 
 
 def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
-    """Run the full GrB-pGrass pipeline on graph W."""
+    """Run the full GrB-pGrass pipeline on graph W.
+
+    With ``cfg.trace`` set (and no outer tracer active) the whole solve
+    runs under a span session rooted at "psc" and the result carries
+    ``telemetry`` (obs.Telemetry).  The recursive coarse-level call of
+    a multilevel solve reuses the outer session, so one timeline covers
+    the whole V-cycle."""
+    with _obs_trace.session(cfg.trace) as owner:
+        with _obs_trace.ACTIVE.span("psc", cat="psc", n=W.n_rows,
+                                    nnz=W.nnz, k=cfg.k, solver=cfg.solver,
+                                    backend=cfg.backend,
+                                    multilevel=bool(cfg.multilevel)):
+            res = _cluster_impl(W, cfg)
+        if owner is not None:
+            res.telemetry = _obs_trace.Telemetry.from_tracer(owner)
+    return res
+
+
+def _cluster_impl(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
     n = W.n_rows
     if n == 0:
         raise ValueError("cannot cluster an empty graph (n_rows == 0): "
@@ -268,46 +303,64 @@ def p_spectral_cluster(W: SparseMatrix, cfg: PSCConfig) -> PSCResult:
         U = jnp.linalg.qr(U)[0]
         init_labels = None
         init_rcut = float("nan")
-        if cfg.guard or cfg.solver == "guarded":
-            U, p_path, fvals, hvps, reports, recovery = \
-                solvers.resilient_warm_start(W, U, cfg)
-        else:
-            U, p_path, fvals, hvps, reports = solvers.warm_start(
-                W, U, cfg, steps=cfg.warm_p_steps)
+        with _obs_trace.ACTIVE.span("continuation", cat="psc", warm=True,
+                                    solver=cfg.solver) as sp:
+            if cfg.guard or cfg.solver == "guarded":
+                U, p_path, fvals, hvps, reports, recovery = \
+                    solvers.resilient_warm_start(W, U, cfg)
+            else:
+                U, p_path, fvals, hvps, reports = solvers.warm_start(
+                    W, U, cfg, steps=cfg.warm_p_steps)
+            sp.fence(U)
+            sp.set(levels=len(p_path))
     else:
         # -- stage 1: linear (p=2) spectral start.  The stage-1 matvec
         # runs under the reals ring, so forward the configured
         # descriptor only when that backend can serve it (edge_pallas
         # is hot-loop-only).
-        stage1_desc = grb_api.capable_desc(W, desc=cfg.descriptor(), k=cfg.k)
-        _, U = lobpcg.smallest_eigvecs(W, cfg.k,
-                                       normalized=cfg.normalized_init,
-                                       seed=cfg.seed, desc=stage1_desc)
-        U = jnp.linalg.qr(U)[0]
-        init_labels, _ = km.kmeans(k_init, U, cfg.k,
-                                   restarts=cfg.kmeans_restarts,
-                                   iters=cfg.kmeans_iters)
-        init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
+        with _obs_trace.ACTIVE.span("init", cat="psc", n=W.n_rows,
+                                    k=cfg.k) as sp:
+            stage1_desc = grb_api.capable_desc(W, desc=cfg.descriptor(),
+                                               k=cfg.k)
+            _, U = lobpcg.smallest_eigvecs(W, cfg.k,
+                                           normalized=cfg.normalized_init,
+                                           seed=cfg.seed, desc=stage1_desc)
+            U = jnp.linalg.qr(U)[0]
+            init_labels, _ = km.kmeans(k_init, U, cfg.k,
+                                       restarts=cfg.kmeans_restarts,
+                                       iters=cfg.kmeans_iters)
+            init_rcut = float(metrics.rcut(W, init_labels, cfg.k))
+            sp.set(init_rcut=init_rcut)
 
         # -- stage 2: p-continuation under the registered driver (the
         # guarded path adds per-level health checks and the recovery
         # ladder — DESIGN.md §9)
-        if cfg.guard or cfg.solver == "guarded":
-            U, p_path, fvals, hvps, reports, recovery = \
-                solvers.resilient_continuation(W, U, cfg)
-        else:
-            U, p_path, fvals, hvps, reports = solvers.p_continuation(
-                W, U, cfg)
+        with _obs_trace.ACTIVE.span("continuation", cat="psc",
+                                    solver=cfg.solver) as sp:
+            if cfg.guard or cfg.solver == "guarded":
+                U, p_path, fvals, hvps, reports, recovery = \
+                    solvers.resilient_continuation(W, U, cfg)
+            else:
+                U, p_path, fvals, hvps, reports = solvers.p_continuation(
+                    W, U, cfg)
+            sp.fence(U)
+            sp.set(levels=len(p_path))
 
     # -- stage 3: kmeans discretization of the nonlinear eigenvectors
-    labels = discretize(U, cfg.k, k_final, restarts=cfg.kmeans_restarts,
-                        iters=cfg.kmeans_iters)
+    with _obs_trace.ACTIVE.span("kmeans", cat="psc", n=W.n_rows,
+                                k=cfg.k) as sp:
+        labels = discretize(U, cfg.k, k_final,
+                            restarts=cfg.kmeans_restarts,
+                            iters=cfg.kmeans_iters)
+        sp.fence(labels)
 
-    # cut metrics are computed in whichever labeling W currently has —
-    # they are permutation-invariant — then every row-indexed output is
-    # mapped back to the caller's vertex ids (inv[old] = new).
-    rcut = float(metrics.rcut(W, labels, cfg.k))
-    ncut = float(metrics.ncut(W, labels, cfg.k))
+        # cut metrics are computed in whichever labeling W currently
+        # has — they are permutation-invariant — then every row-indexed
+        # output is mapped back to the caller's vertex ids
+        # (inv[old] = new).
+        rcut = float(metrics.rcut(W, labels, cfg.k))
+        ncut = float(metrics.ncut(W, labels, cfg.k))
+        sp.set(rcut=rcut)
     labels = np.asarray(labels)
     if init_labels is not None:
         init_labels = np.asarray(init_labels)

@@ -54,6 +54,8 @@ from repro.core.solvers.registry import (SolverReport, SolverState,
                                          register_solver)
 from repro.grblas.api import Descriptor
 from repro.grblas.backends import BackendUnavailableError
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -276,8 +278,15 @@ def _run_levels(W, U0, ps, cfg, gcfg: GuardConfig, out: _Records):
     for i, p in enumerate(ps):
         p = float(p)
         try:
-            f_in = _f_at(W, U, p, cfg)
-            rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+            with _obs_trace.ACTIVE.span("solver.level", cat="solver",
+                                        solver=solver.name, p=p,
+                                        guarded=True) as sp:
+                f_in = _f_at(W, U, p, cfg)
+                rep = solver.minimize_at_p(
+                    SolverState(W=W, U=U, p=p, cfg=cfg))
+                sp.fence(rep.U)
+                sp.set(fval=float(rep.fval), n_apply=int(rep.n_apply),
+                       iters=int(rep.iters), converged=bool(rep.converged))
         except (KeyboardInterrupt, SystemExit):
             raise
         except SolverDivergence as exc:
@@ -323,6 +332,28 @@ def _qr(U) -> jnp.ndarray:
     return jnp.linalg.qr(jnp.asarray(U))[0]
 
 
+def _emit_rung(rec: RungRecord) -> None:
+    """One recovery-rung firing = exactly one counter increment + one
+    trace instant, stamped with the active injection id so chaos-suite
+    timelines correlate the fault with the recovery it triggered
+    (tests/test_obs.py pins the exactly-once contract)."""
+    _obs_metrics.DEFAULT.counter("recovery_rungs_total", rung=rec.rung).inc()
+    _obs_trace.ACTIVE.instant(
+        "recovery.rung", rung=rec.rung, driver=rec.driver,
+        backend=rec.backend, ok=rec.ok, p_resume=rec.p_resume,
+        injection_id=_obs_trace.current_injection())
+
+
+def _emit_divergence(recovery: RecoveryReport) -> None:
+    _obs_metrics.DEFAULT.counter(
+        "solver_divergence_total",
+        reason=str(recovery.diverged_reason)).inc()
+    _obs_trace.ACTIVE.instant(
+        "solver.divergence", reason=recovery.diverged_reason,
+        p=recovery.diverged_p, level=recovery.diverged_level,
+        injection_id=_obs_trace.current_injection())
+
+
 def _ladder(W, U_lg, p_from: float, remaining: List[float], cfg,
             gcfg: GuardConfig, out: _Records, recovery: RecoveryReport):
     """Walk the recovery rungs from the last-good embedding ``U_lg``.
@@ -340,12 +371,16 @@ def _ladder(W, U_lg, p_from: float, remaining: List[float], cfg,
         rec = RungRecord(rung=rung, driver=driver, backend=backend,
                          p_resume=p_from, ok=False)
         try:
-            U, recs = fn()
+            with _obs_trace.ACTIVE.span(f"recovery.{rung}", cat="recovery",
+                                        driver=driver, backend=backend,
+                                        p_resume=p_from):
+                U, recs = fn()
             if not _finite(U):
                 raise SolverDivergence("nonfinite", p=p_target, level=0,
                                        last_good_U=U_lg)
             rec.ok = True
             recovery.rungs.append(rec)
+            _emit_rung(rec)
             out.merge(recs)
             return U
         except (KeyboardInterrupt, SystemExit):
@@ -353,6 +388,7 @@ def _ladder(W, U_lg, p_from: float, remaining: List[float], cfg,
         except Exception as exc:                   # noqa: BLE001 — recorded
             rec.detail = f"{type(exc).__name__}: {exc}"
             recovery.rungs.append(rec)
+            _emit_rung(rec)
             return None
 
     # -- rung 1: same driver, warm restart on a densified schedule
@@ -458,6 +494,7 @@ def resilient_continuation(W, U0, cfg):
         recovery.diverged_reason = exc.reason
         recovery.diverged_p = exc.p
         recovery.diverged_level = exc.level
+        _emit_divergence(recovery)
         U_lg = exc.last_good_U if exc.last_good_U is not None else U0
         p_from = exc.last_good_p if exc.last_good_p is not None else 2.0
         remaining = full[len(out.p_path):]
@@ -493,6 +530,7 @@ def resilient_warm_start(W, U0, cfg):
         recovery.diverged_reason = exc.reason
         recovery.diverged_p = exc.p
         recovery.diverged_level = exc.level
+        _emit_divergence(recovery)
         if exc.last_good_U is not None:
             U_lg, p_from = exc.last_good_U, \
                 (exc.last_good_p if exc.last_good_p is not None else 2.0)

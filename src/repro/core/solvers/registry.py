@@ -50,6 +50,9 @@ from typing import Callable, Dict, List, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
 
 class SolverUnavailableError(ValueError):
     """The requested solver is not registered (or cannot run here)."""
@@ -195,7 +198,12 @@ def p_continuation(W, U0, cfg):
     applies: List[int] = []
     reports: List[SolverReport] = []
     for p in p_schedule(cfg):
-        rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+        with _obs_trace.ACTIVE.span("solver.level", cat="solver",
+                                    solver=solver.name, p=float(p)) as sp:
+            rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+            sp.fence(rep.U)
+            sp.set(fval=float(rep.fval), n_apply=int(rep.n_apply),
+                   iters=int(rep.iters), converged=bool(rep.converged))
         U = rep.U
         p_path.append(p)
         fvals.append(float(rep.fval))
@@ -234,7 +242,13 @@ def warm_start(W, U0, cfg, p_final: Optional[float] = None,
     applies: List[int] = []
     reports: List[SolverReport] = []
     for p in tail:
-        rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+        with _obs_trace.ACTIVE.span("solver.level", cat="solver",
+                                    solver=solver.name, p=float(p),
+                                    warm=True) as sp:
+            rep = solver.minimize_at_p(SolverState(W=W, U=U, p=p, cfg=cfg))
+            sp.fence(rep.U)
+            sp.set(fval=float(rep.fval), n_apply=int(rep.n_apply),
+                   iters=int(rep.iters), converged=bool(rep.converged))
         U = rep.U
         p_path.append(p)
         fvals.append(float(rep.fval))
@@ -248,6 +262,7 @@ def warm_start(W, U0, cfg, p_final: Optional[float] = None,
 _TRACE_CACHE: Dict[tuple, Callable] = {}
 SOLVER_TRACES: List[tuple] = []   # one entry appended per *trace*; tests
                                   # assert a continuation doesn't grow it
+TRACE_LISTENERS: List[Callable] = []   # extra per-compile hooks (key) -> None
 
 
 def memoized(key: tuple, build: Callable) -> Callable:
@@ -268,8 +283,16 @@ def memoized(key: tuple, build: Callable) -> Callable:
 
 def mark_trace(key: tuple) -> None:
     """Record a trace event (call from inside the traced function: jit
-    replays are silent, only fresh traces append)."""
+    replays are silent, only fresh traces append).  Each fresh trace
+    also bumps ``compiles_total{site=<key head>}`` on the DEFAULT
+    metrics registry and stamps a ``compile`` instant on the active
+    span timeline — obs.retrace builds its detector on this."""
     SOLVER_TRACES.append(key)
+    site = str(key[0]) if key else "?"
+    _obs_metrics.DEFAULT.counter("compiles_total", site=site).inc()
+    _obs_trace.ACTIVE.instant("compile", site=site, key=str(key))
+    for fn in TRACE_LISTENERS:
+        fn(key)
 
 
 def backend_bakes_ring_params(cfg, W, probes) -> bool:

@@ -53,6 +53,8 @@ import jax.numpy as jnp
 
 from repro.grblas import backends as _backends
 from repro.grblas.semiring import reals_ring
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 # re-exported for callers that catch dispatch failures
 BackendUnavailableError = _backends.BackendUnavailableError
@@ -94,10 +96,71 @@ def mxm(A, X, ring=reals_ring, *, mask=None, accum=None,
                 "mask/accum write semantics are defined for dense outputs; "
                 "the sparse-sparse product returns a SparseMatrix")
         be = _backends.select_backend(A, X, ring, desc)
-        return be.execute(A, X, ring, desc)
+        tr = _obs_trace.ACTIVE
+        if not tr.enabled:
+            return be.execute(A, X, ring, desc)
+        with tr.span("grblas.spgemm", cat="grblas", backend=be.name,
+                     n=A.n_rows, nnz_a=int(A.nnz), nnz_b=int(X.nnz)):
+            return be.execute(A, X, ring, desc)
     be = _backends.select_backend(A, X, ring, desc)
-    Y = be.execute(A, X, ring, desc)
+    tr = _obs_trace.ACTIVE
+    if not tr.enabled:
+        Y = be.execute(A, X, ring, desc)
+    else:
+        Y = _execute_observed(be, A, X, ring, desc, tr)
     return _finalize(Y, ring, mask, accum)
+
+
+def _ring_kind(ring) -> str:
+    return (getattr(ring, "kind", None) or getattr(ring, "name", None)
+            or type(ring).__name__)
+
+
+def _x_width(X) -> int:
+    if isinstance(X, tuple):
+        X = X[0]
+    shp = getattr(X, "shape", ())
+    return int(shp[1]) if len(shp) > 1 else 1
+
+
+def _traffic_bytes(A, k: int, itemsize: int = 4) -> int:
+    """Minimum-traffic SpMM byte model (the memory-roofline denominator
+    used by benchmarks/roofline_report.py's dominant-term accounting):
+    stream A once (value + column index per nnz), stream the multivector
+    in and the product out once.  Real gathers re-read X rows, so
+    achieved GB/s against this model is a lower bound."""
+    nnz = int(getattr(A, "nnz", 0))
+    n_rows = int(getattr(A, "n_rows", 0))
+    n_cols = int(getattr(A, "n_cols", n_rows))
+    return nnz * (itemsize + 4) + (n_rows + n_cols) * k * itemsize
+
+
+def _execute_observed(be, A, X, ring, desc, tr):
+    """Dispatch accounting when tracing is on.  Inside a jit trace the
+    op runs once per *compile*, so wall-clock spans would time the
+    tracer — record the dispatch decision (backend, ring kind) as an
+    instant + counter instead.  Eager calls get a fenced span carrying
+    shapes, nnz, and the byte model (→ achieved GB/s via
+    obs.trace.roofline_summary)."""
+    kind = _ring_kind(ring)
+    if _obs_trace.under_trace(X[0] if isinstance(X, tuple) else X):
+        _obs_metrics.DEFAULT.counter("grblas_dispatch_total",
+                                     backend=be.name, ring=kind,
+                                     ctx="traced").inc()
+        tr.instant("grblas.dispatch", backend=be.name, ring=kind,
+                   traced=True)
+        return be.execute(A, X, ring, desc)
+    k = _x_width(X)
+    nnz = int(getattr(A, "nnz", 0))
+    with tr.span("grblas.mxm", cat="grblas", backend=be.name, ring=kind,
+                 n=int(getattr(A, "n_rows", 0)), k=k, nnz=nnz) as sp:
+        Y = be.execute(A, X, ring, desc)
+        sp.fence(Y)
+        sp.set(bytes=_traffic_bytes(A, k))
+    _obs_metrics.DEFAULT.counter("grblas_dispatch_total", backend=be.name,
+                                 ring=kind, ctx="eager").inc()
+    _obs_metrics.DEFAULT.counter("grblas_nnz_total", backend=be.name).inc(nnz)
+    return Y
 
 
 def mxv(A, x, ring=reals_ring, *, mask=None, accum=None,
@@ -130,7 +193,17 @@ def capable_desc(A, ring=reals_ring, desc: Optional[Descriptor] = None, *,
     if desc is None:
         return None
     probe = jax.ShapeDtypeStruct((A.n_rows, k), dtype)
-    return desc if _backends.can_execute(A, probe, ring, desc) else None
+    if _backends.can_execute(A, probe, ring, desc):
+        return desc
+    if desc.backend != "auto":
+        # a pinned backend degrading to auto is a fallback event: count
+        # it so a hot loop silently losing its Pallas path is visible
+        _obs_metrics.DEFAULT.counter("grblas_fallback_total",
+                                     backend=desc.backend,
+                                     ring=_ring_kind(ring)).inc()
+        _obs_trace.ACTIVE.instant("grblas.fallback", backend=desc.backend,
+                                  ring=_ring_kind(ring))
+    return None
 
 
 def _finalize(Y, ring, mask, accum):

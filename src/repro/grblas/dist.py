@@ -46,6 +46,8 @@ from jax.sharding import PartitionSpec as P
 from repro import compat
 from repro.compat import shard_map
 from repro.grblas.containers import SparseMatrix
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.grblas.semiring import (Semiring, EdgeSemiring, fast_paths,
                                    reals_ring)
 
@@ -320,6 +322,12 @@ def make_row_partition(A: SparseMatrix, n_shards: int,
         needed, H, total = _halo_plan(ell_cols, n_shards, R)
         if mode == "auto" and H > halo_threshold * R:
             use_halo = False
+            # the silent degradation PR 5 added — make it observable:
+            # a partition that planned a halo but shipped the gather
+            _obs_metrics.DEFAULT.counter("dist_gather_fallback_total").inc()
+            _obs_trace.ACTIVE.instant(
+                "dist.gather_fallback", n=A.n_rows, n_shards=n_shards,
+                halo_width=int(H), rows_per_shard=int(R))
     if use_halo:
         cols_local = _remap_local(ell_cols, needed, n_shards, R, H)
         Ap = RowPartitionedMatrix(
@@ -395,6 +403,26 @@ def shard_mxm(Ap: RowPartitionedMatrix, X: jnp.ndarray, mesh,
             f"partition was built for {S} shards but mesh axis {axis!r} "
             f"has size {int(mesh.shape[axis])}: rebuild with "
             f"make_row_partition(A, {int(mesh.shape[axis])})")
+    tr = _obs_trace.ACTIVE
+    if tr.enabled and not _obs_trace.under_trace(X):
+        k_eff = int(X.shape[1]) if X.ndim > 1 else 1
+        wb = Ap.wire_bytes(k_eff)
+        wire = int(wb["halo"] if Ap.mode == "halo" else wb["gather"])
+        with tr.span("dist.shard_mxm", cat="dist", mode=Ap.mode,
+                     n=Ap.n_rows, n_shards=S, k=k_eff,
+                     halo_width=int(Ap.halo_width), wire_bytes=wire,
+                     layout=layout) as sp:
+            out = _shard_mxm_impl(Ap, X, mesh, axis, ring, layout, S, R)
+            sp.fence(out)
+        _obs_metrics.DEFAULT.counter("dist_wire_bytes_total",
+                                     mode=Ap.mode).inc(wire)
+        _obs_metrics.DEFAULT.counter("dist_shard_mxm_total",
+                                     mode=Ap.mode).inc()
+        return out
+    return _shard_mxm_impl(Ap, X, mesh, axis, ring, layout, S, R)
+
+
+def _shard_mxm_impl(Ap, X, mesh, axis, ring, layout, S, R):
     n_pad = S * R
     edge = isinstance(ring, EdgeSemiring)
     one_d = X.ndim == 1

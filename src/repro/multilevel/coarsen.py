@@ -46,6 +46,7 @@ import jax.numpy as jnp
 from repro.grblas import api
 from repro.grblas.api import Descriptor
 from repro.grblas.containers import SparseMatrix
+from repro.obs import trace as _obs_trace
 
 _T = Descriptor(transpose=True)
 
@@ -424,17 +425,26 @@ def build_hierarchy(W: SparseMatrix, coarse_size: int = 2048,
     levels = [Level(W=W, vol=vol, counts=counts)]
     prolongators: List[SparseMatrix] = []
     infos: List[CoarsenInfo] = []
-    while (levels[-1].W.n_rows > coarse_size
-           and len(levels) < max(int(max_levels), 1)):
-        cur = levels[-1]
-        P, Wc, info = coarsen_graph(cur.W, rounds=rounds,
-                                    layout_kwargs=layout_kwargs,
-                                    sparsify_cap=cap, max_agg=max_agg)
-        if info.n_coarse >= min_reduction * info.n_fine:
-            break                                # matching stagnated
-        vol_c = api.mxm(P, cur.vol, desc=_T)     # Pᵀ vol (restriction)
-        cnt_c = api.mxm(P, cur.counts, desc=_T)
-        levels.append(Level(W=Wc, vol=vol_c, counts=cnt_c))
-        prolongators.append(P)
-        infos.append(info)
+    with _obs_trace.ACTIVE.span("multilevel.coarsen", cat="multilevel",
+                                n=W.n_rows, nnz=W.nnz) as outer:
+        while (levels[-1].W.n_rows > coarse_size
+               and len(levels) < max(int(max_levels), 1)):
+            cur = levels[-1]
+            with _obs_trace.ACTIVE.span(
+                    "multilevel.coarsen_level", cat="multilevel",
+                    level=len(levels) - 1, n=cur.W.n_rows,
+                    nnz=cur.W.nnz) as sp:
+                P, Wc, info = coarsen_graph(cur.W, rounds=rounds,
+                                            layout_kwargs=layout_kwargs,
+                                            sparsify_cap=cap,
+                                            max_agg=max_agg)
+                if info.n_coarse >= min_reduction * info.n_fine:
+                    break                        # matching stagnated
+                vol_c = api.mxm(P, cur.vol, desc=_T)  # Pᵀ vol (restriction)
+                cnt_c = api.mxm(P, cur.counts, desc=_T)
+                sp.set(n_coarse=int(info.n_coarse))
+            levels.append(Level(W=Wc, vol=vol_c, counts=cnt_c))
+            prolongators.append(P)
+            infos.append(info)
+        outer.set(n_levels=len(levels))
     return Hierarchy(levels=levels, prolongators=prolongators, infos=infos)

@@ -34,6 +34,7 @@ from repro.grblas import api
 from repro.grblas.api import Descriptor
 from repro.grblas.containers import SparseMatrix
 from repro.multilevel.coarsen import build_hierarchy
+from repro.obs import trace as _obs_trace
 
 _T = Descriptor(transpose=True)
 
@@ -129,23 +130,29 @@ def _walk_up(hier, U, cfg, ml: MultilevelConfig, rec: dict):
     for lev in range(hier.n_levels - 2, -1, -1):
         P = hier.prolongators[lev]
         Wl = hier.levels[lev].W
-        U = api.mxm(P, U)                       # prolong: (n_lev, k)
-        if Wl.n_rows < ml.refine_top_frac * n_fine:
-            continue
-        refine_cfg.validate_backend(Wl)
-        U = jnp.linalg.qr(U)[0]                 # Grassmann retraction
-        for p in tail:
-            res = solvers.minimize_at_p(Wl, U, p, refine_cfg)
-            U = res.U
-            rec["p_path"].append(p)
-            rec["fvals"].append(float(res.fval))
-            rec["hvps"].append(int(res.n_apply))
-            rec["reports"].append(res)
-            rec["levels"].append({
-                "level": lev, "n_levels": hier.n_levels,
-                "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
-                "fval": float(res.fval), "n_hvp": int(res.n_apply),
-                "iters": int(res.iters), "solver": refine_cfg.solver})
+        refined = Wl.n_rows >= ml.refine_top_frac * n_fine
+        with _obs_trace.ACTIVE.span("multilevel.refine", cat="multilevel",
+                                    level=lev, n=Wl.n_rows, nnz=Wl.nnz,
+                                    refined=refined,
+                                    solver=refine_cfg.solver) as sp:
+            U = api.mxm(P, U)                   # prolong: (n_lev, k)
+            if not refined:
+                continue
+            refine_cfg.validate_backend(Wl)
+            U = jnp.linalg.qr(U)[0]             # Grassmann retraction
+            for p in tail:
+                res = solvers.minimize_at_p(Wl, U, p, refine_cfg)
+                U = res.U
+                rec["p_path"].append(p)
+                rec["fvals"].append(float(res.fval))
+                rec["hvps"].append(int(res.n_apply))
+                rec["reports"].append(res)
+                rec["levels"].append({
+                    "level": lev, "n_levels": hier.n_levels,
+                    "n": Wl.n_rows, "nnz": Wl.nnz, "p": p,
+                    "fval": float(res.fval), "n_hvp": int(res.n_apply),
+                    "iters": int(res.iters), "solver": refine_cfg.solver})
+            sp.fence(U)
     return jnp.linalg.qr(U)[0]
 
 
@@ -157,11 +164,15 @@ def _finalize(W: SparseMatrix, U, cfg, rec: dict, init_labels, init_rcut):
 
     key = jax.random.PRNGKey(cfg.seed)
     _, sub = jax.random.split(key)
-    Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True), 1e-12)
-    labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
-                          iters=cfg.kmeans_iters)
-    rcut = float(metrics.rcut(W, labels, cfg.k))
-    ncut = float(metrics.ncut(W, labels, cfg.k))
+    with _obs_trace.ACTIVE.span("kmeans", cat="psc", n=W.n_rows,
+                                k=cfg.k) as sp:
+        Xn = U / jnp.maximum(jnp.linalg.norm(U, axis=1, keepdims=True),
+                             1e-12)
+        labels, _ = km.kmeans(sub, Xn, cfg.k, restarts=cfg.kmeans_restarts,
+                              iters=cfg.kmeans_iters)
+        sp.fence(labels)
+        rcut = float(metrics.rcut(W, labels, cfg.k))
+        ncut = float(metrics.ncut(W, labels, cfg.k))
     return _psc.PSCResult(
         labels=np.asarray(labels), U=U, rcut=rcut, ncut=ncut,
         p_path=rec["p_path"], fvals=rec["fvals"], hvp_counts=rec["hvps"],
@@ -195,7 +206,11 @@ def multilevel_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig
 
     # -- coarsest level: the whole flat pipeline (p=2 LOBPCG init + full
     # p-continuation).  Its labels seed init_labels on the fine graph.
-    res_c = _psc.p_spectral_cluster(hier.coarsest.W, flat_cfg)
+    with _obs_trace.ACTIVE.span("multilevel.coarse_solve", cat="multilevel",
+                                n=hier.coarsest.W.n_rows,
+                                nnz=hier.coarsest.W.nnz,
+                                solver=flat_cfg.solver):
+        res_c = _psc.p_spectral_cluster(hier.coarsest.W, flat_cfg)
     rec = {"p_path": list(res_c.p_path), "fvals": list(res_c.fvals),
            "hvps": list(res_c.hvp_counts),
            "reports": list(res_c.reports or []), "levels": []}
@@ -241,9 +256,12 @@ def refine_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig,
     # -- restrict the cached embedding to the coarsest level: Pᵀ U is
     # the aggregate-sum restriction (partition-of-unity columns), the
     # subspace analogue of prolong_labels' constant-on-aggregates map.
-    for P in hier.prolongators:
-        U = api.mxm(P, U, desc=_T)
-    U = jnp.linalg.qr(U)[0]
+    with _obs_trace.ACTIVE.span("multilevel.restrict", cat="multilevel",
+                                n_levels=hier.n_levels) as sp:
+        for P in hier.prolongators:
+            U = api.mxm(P, U, desc=_T)
+        U = jnp.linalg.qr(U)[0]
+        sp.fence(U)
 
     # -- coarsest level: warm entry at the end of the p schedule under
     # the coarse driver (no LOBPCG, no continuation descent)
@@ -251,9 +269,13 @@ def refine_cluster(W: SparseMatrix, cfg, ml: MultilevelConfig,
         cfg, multilevel=None, reorder="none",
         solver=ml.coarse_solver or cfg.solver)
     coarse_cfg.validate_backend(hier.coarsest.W)
-    U, p_path, fvals, hvps, reports = solvers.warm_start(
-        hier.coarsest.W, U, coarse_cfg,
-        steps=max(int(ml.refine_p_steps), 1))
+    with _obs_trace.ACTIVE.span("multilevel.coarse_solve", cat="multilevel",
+                                n=hier.coarsest.W.n_rows,
+                                nnz=hier.coarsest.W.nnz, warm=True,
+                                solver=coarse_cfg.solver):
+        U, p_path, fvals, hvps, reports = solvers.warm_start(
+            hier.coarsest.W, U, coarse_cfg,
+            steps=max(int(ml.refine_p_steps), 1))
     rec["p_path"] += p_path
     rec["fvals"] += fvals
     rec["hvps"] += hvps

@@ -1,0 +1,36 @@
+"""repro.obs — telemetry substrate: spans, metrics, retrace detection.
+
+See DESIGN.md §10.  Import layering: ``obs.trace`` and ``obs.metrics``
+depend only on stdlib + jax so the lowest layers (grblas, the solver
+registry) import them freely; ``obs.retrace`` sits above the solver
+stack and is exposed lazily here to keep the package cycle-free.
+"""
+from repro.obs import metrics, trace
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               DEFAULT)
+from repro.obs.trace import (NULL, Span, Telemetry, TraceConfig, Tracer,
+                             begin_injection, current_injection,
+                             roofline_summary, session, use)
+
+__all__ = [
+    "metrics", "trace", "retrace",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "DEFAULT",
+    "NULL", "Span", "Telemetry", "TraceConfig", "Tracer",
+    "begin_injection", "current_injection", "roofline_summary",
+    "session", "use",
+    "RetraceDetector", "RetraceError", "assert_no_retrace",
+]
+
+_LAZY = {"retrace", "RetraceDetector", "RetraceError", "assert_no_retrace"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        _retrace = importlib.import_module("repro.obs.retrace")
+        globals()["retrace"] = _retrace
+        globals()["RetraceDetector"] = _retrace.RetraceDetector
+        globals()["RetraceError"] = _retrace.RetraceError
+        globals()["assert_no_retrace"] = _retrace.assert_no_retrace
+        return globals()[name]
+    raise AttributeError(f"module 'repro.obs' has no attribute {name!r}")

@@ -1,0 +1,105 @@
+"""Retrace / recompile detection over the solver-registry trace memo.
+
+Every jitted driver in this repo marks its compiles through
+``registry.mark_trace(key)`` — the Newton/SCF/inverse-power memos and
+the serve engine's per-bucket vmapped solves all flow through it (the
+serve keys are ``("serve", mode, n, nnz, k) + solver-sig``).  PR 7
+asserted "one trace per bucket" by counting ``SOLVER_TRACES`` by hand
+in the bench; this module turns that side channel into a first-class
+detector:
+
+  * :class:`RetraceDetector` — position-bookmark over ``SOLVER_TRACES``
+    with per-key compile counts and bucket/solver groupings,
+  * :func:`assert_no_retrace` — context manager for steady-state
+    regions: any *new* compile inside the block raises
+    :class:`RetraceError` naming the offending keys,
+  * a ``compiles_total{site=...}`` counter on the DEFAULT metrics
+    registry plus a ``compile`` instant on the active tracer — both
+    emitted by ``registry.mark_trace`` itself (with
+    ``registry.TRACE_LISTENERS`` for extra hooks), so compiles show up
+    on the same timeline as the spans they stall.
+
+The registry import is deferred to call time: obs.trace/metrics sit
+*below* the solver stack (grblas imports them), this module sits above
+it, and lazy import keeps the package cycle-free.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Tuple
+
+
+def _registry():
+    from repro.core.solvers import registry
+    return registry
+
+
+class RetraceError(AssertionError):
+    """A jitted region recompiled (or compiled more than allowed)."""
+
+
+def _sitename(key) -> str:
+    return str(key[0]) if isinstance(key, tuple) and key else str(key)
+
+
+class RetraceDetector:
+    """Bookmark ``SOLVER_TRACES`` at construction; everything appended
+    after is 'ours'."""
+
+    def __init__(self):
+        self._base = len(_registry().SOLVER_TRACES)
+
+    def traces(self) -> List[tuple]:
+        """New trace keys since construction, in order."""
+        return list(_registry().SOLVER_TRACES[self._base:])
+
+    def compiles(self) -> Dict[tuple, int]:
+        """Compile count per full memo key."""
+        out: Dict[tuple, int] = {}
+        for k in self.traces():
+            out[k] = out.get(k, 0) + 1
+        return out
+
+    def by_site(self) -> Dict[str, int]:
+        """Compile count per site (key head: "serve", "newton", ...)."""
+        out: Dict[str, int] = {}
+        for k in self.traces():
+            s = _sitename(k)
+            out[s] = out.get(s, 0) + 1
+        return out
+
+    def serve_buckets(self) -> Dict[Tuple, int]:
+        """Compile count per serve (bucket, solver) memo key — the
+        bench acceptance is every value here == 1."""
+        return {k: v for k, v in self.compiles().items()
+                if _sitename(k) == "serve"}
+
+    def assert_at_most(self, max_per_key: int = 1) -> None:
+        bad = {k: v for k, v in self.compiles().items() if v > max_per_key}
+        if bad:
+            lines = "\n".join(f"  {v}x {k}" for k, v in bad.items())
+            raise RetraceError(
+                f"retrace detected: {len(bad)} key(s) compiled more than "
+                f"{max_per_key}x since detector start:\n{lines}")
+
+    def assert_no_retrace(self) -> None:
+        """No key compiled since construction."""
+        fresh = self.compiles()
+        if fresh:
+            lines = "\n".join(f"  {v}x {k}" for k, v in fresh.items())
+            raise RetraceError(
+                f"retrace detected: {sum(fresh.values())} unexpected "
+                f"compile(s):\n{lines}")
+
+
+@contextlib.contextmanager
+def assert_no_retrace():
+    """Steady-state guard: the block must trigger zero new compiles.
+
+    >>> eng.submit(...); eng.poll()        # warm every bucket first
+    >>> with assert_no_retrace():
+    ...     eng.submit(...); eng.poll()    # replays only, or RetraceError
+    """
+    det = RetraceDetector()
+    yield det
+    det.assert_no_retrace()

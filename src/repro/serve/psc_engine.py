@@ -57,6 +57,8 @@ from repro.core.solvers.guard import SolverDivergence
 from repro.grblas.api import Descriptor
 from repro.grblas.backends import BackendUnavailableError
 from repro.grblas.containers import GraphFingerprint, SparseMatrix
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 from repro.serve.bucketing import (BucketBatch, BucketSpec, assemble_batch,
                                    bucket_for, pad_embeddings)
 from repro.serve.churn import EdgeDelta, apply_edge_delta, \
@@ -274,26 +276,87 @@ def _bucket_solver(spec: BucketSpec, cfg):
 
 # ------------------------------------------------------------------- engine
 
-@dataclasses.dataclass
 class EngineStats:
-    n_requests: int = 0
-    n_results: int = 0
-    n_batches: int = 0
-    n_solo: int = 0
-    n_churn: int = 0
-    traces: int = 0              # serve-lane traces compiled
-    solve_s: float = 0.0
-    graphs_per_s: float = 0.0
-    # failure taxonomy (DESIGN.md §9)
-    n_failed: int = 0            # requests returning a structured error
-    n_degraded: int = 0          # requests served at degrade level >= 1
-    n_retried: int = 0           # churn re-solve retry attempts
-    n_quarantined: int = 0       # poisoned requests isolated from a batch
-    n_quarantine_splits: int = 0  # bisection rounds run to isolate them
-    failures: Dict[str, int] = dataclasses.field(default_factory=dict)
+    """Engine-level counters — live *views* over the engine's
+    :class:`~repro.obs.metrics.MetricsRegistry` (DESIGN.md §10).
+
+    Historically a dataclass of plain ints incremented beside the
+    cache's own counters (two sets of books).  Every counter attribute
+    now reads through to one metric family, and ``stats.field += 1``
+    still works — the property setter forwards the delta to the
+    underlying monotonic counter — so call sites and external readers
+    are unchanged.  ``n_failed`` / ``failures`` both derive from the
+    single labeled ``serve_failed_total`` family and can never
+    disagree.  ``solve_s`` / ``graphs_per_s`` stay plain floats (they
+    are derived timings, not monotonic counts).
+    """
+
+    # attribute -> counter family backing it
+    _VIEWS = {
+        "n_requests": "serve_requests_total",
+        "n_results": "serve_results_total",
+        "n_batches": "serve_batches_total",
+        "n_solo": "serve_solo_total",
+        "n_churn": "serve_churn_total",
+        "traces": "serve_traces_total",          # serve-lane compiles
+        "n_degraded": "serve_degraded_total",    # served at degrade >= 1
+        "n_retried": "serve_churn_retries_total",
+        "n_quarantined": "serve_quarantined_total",
+        "n_quarantine_splits": "serve_quarantine_splits_total",
+    }
+
+    def __init__(self, registry: "_obs_metrics.MetricsRegistry" = None):
+        self.registry = registry if registry is not None \
+            else _obs_metrics.MetricsRegistry()
+        self.solve_s = 0.0
+        self.graphs_per_s = 0.0
+
+    def record_failure(self, kind: str) -> None:
+        """The one write path for the failure taxonomy."""
+        self.registry.counter("serve_failed_total", kind=kind).inc()
+
+    @property
+    def n_failed(self) -> int:
+        """Requests that returned a structured error (any kind)."""
+        return int(self.registry.total("serve_failed_total"))
+
+    @property
+    def failures(self) -> Dict[str, int]:
+        """Failure-taxonomy histogram (DESIGN.md §9), reconstructed
+        from the ``kind`` label of ``serve_failed_total``."""
+        vals = self.registry.labeled_values("serve_failed_total", "kind")
+        return {k: int(v) for k, v in vals.items()}
 
     def as_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        out = {name: getattr(self, name)
+               for name in ("n_requests", "n_results", "n_batches",
+                            "n_solo", "n_churn", "traces")}
+        out["solve_s"] = self.solve_s
+        out["graphs_per_s"] = self.graphs_per_s
+        for name in ("n_failed", "n_degraded", "n_retried",
+                     "n_quarantined", "n_quarantine_splits"):
+            out[name] = getattr(self, name)
+        out["failures"] = self.failures
+        return out
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of the whole engine registry."""
+        return self.registry.exposition()
+
+
+def _stat_view(metric: str) -> property:
+    def fget(self):
+        return int(self.registry.value(metric))
+
+    def fset(self, value):
+        self.registry.counter(metric).inc(value - self.registry.value(metric))
+
+    return property(fget, fset)
+
+
+for _field, _metric in EngineStats._VIEWS.items():
+    setattr(EngineStats, _field, _stat_view(_metric))
+del _field, _metric
 
 
 def _classify(err) -> str:
@@ -339,7 +402,10 @@ class ClusterServeEngine:
         if self.cfg.reorder != "none":
             raise ValueError("the serve engine owns vertex order; use "
                              "reorder='none' in the template config")
-        self.cache = WarmCache(cache_capacity)
+        # one registry for engine + cache: EngineStats and
+        # WarmCache.stats() are views over it, never separate books
+        self.metrics = _obs_metrics.MetricsRegistry()
+        self.cache = WarmCache(cache_capacity, metrics=self.metrics)
         self.max_batch = int(max_batch)
         self.max_wait_s = float(max_wait_s)
         self.max_bucket_n = int(max_bucket_n)
@@ -362,8 +428,17 @@ class ClusterServeEngine:
         self._solo: List[_Pending] = []
         self._results: Dict[int, ServeResult] = {}
         self._next_id = 0
-        self.stats = EngineStats()
+        self.stats = EngineStats(self.metrics)
         self._bucketable = self.cfg.solver in ("newton", "scf")
+
+    def exposition(self) -> str:
+        """Prometheus text exposition of the engine's registry (engine
+        counters + warm-cache counters + queue/occupancy instruments)."""
+        return self.metrics.exposition()
+
+    def _note_queue(self) -> None:
+        depth = sum(len(q) for q in self._buckets.values()) + len(self._solo)
+        self.metrics.gauge("serve_queue_depth").set(depth)
 
     # ------------------------------------------------------------ admission
 
@@ -442,6 +517,7 @@ class ClusterServeEngine:
             self._buckets.setdefault(spec.key, []).append(pend)
         else:
             self._solo.append(pend)
+        self._note_queue()
         return rid
 
     # ------------------------------------------------------------- draining
@@ -464,6 +540,7 @@ class ClusterServeEngine:
                 del self._buckets[bkey]
         while self._solo:
             self._run_solo(self._solo.pop(0))
+        self._note_queue()
         return dict(self._results)
 
     def flush(self) -> Dict[int, ServeResult]:
@@ -475,6 +552,7 @@ class ClusterServeEngine:
                 self._run_bucket(q[i:i + self.max_batch])
         while self._solo:
             self._run_solo(self._solo.pop(0))
+        self._note_queue()
         return dict(self._results)
 
     def serve(self, graphs, k: Optional[int] = None) -> List[ServeResult]:
@@ -543,8 +621,9 @@ class ClusterServeEngine:
             req_id=pend.req_id, labels=None, U=None, rcut=float("nan"),
             ncut=float("nan"), stats=st, error=msg)
         self.stats.n_results += 1
-        self.stats.n_failed += 1
-        self.stats.failures[kind] = self.stats.failures.get(kind, 0) + 1
+        self.stats.record_failure(kind)
+        _obs_trace.ACTIVE.instant("serve.fail", cat="serve",
+                                  req_id=pend.req_id, kind=kind, lane=lane)
 
     def _solve_bucket(self, pends: List[_Pending], spec) -> tuple:
         """The batched solve itself (no per-request error handling —
@@ -568,18 +647,27 @@ class ClusterServeEngine:
             return a if fill <= 0 else \
                 np.concatenate([a, np.repeat(a[-1:], fill, axis=0)])
 
-        U, fvals = solver(jnp.asarray(_fill(batch.rows)),
-                          jnp.asarray(_fill(batch.cols)),
-                          jnp.asarray(_fill(batch.vals)),
-                          jnp.asarray(_fill(batch.mask)),
-                          jnp.asarray(_fill(U0)))
+        with _obs_trace.ACTIVE.span("serve.bucket_solve", cat="serve",
+                                    bucket=str(spec.key), mode=spec.mode,
+                                    batch=len(pends), n=spec.n,
+                                    nnz=spec.nnz, k=spec.k) as sp:
+            U, fvals = solver(jnp.asarray(_fill(batch.rows)),
+                              jnp.asarray(_fill(batch.cols)),
+                              jnp.asarray(_fill(batch.vals)),
+                              jnp.asarray(_fill(batch.mask)),
+                              jnp.asarray(_fill(U0)))
+            sp.fence(U)
+            trace_new = sum(1 for t in registry.SOLVER_TRACES if t == key) \
+                > n_traces0
+            sp.set(trace_new=trace_new)
         U = np.asarray(U)
-        trace_new = sum(1 for t in registry.SOLVER_TRACES if t == key) \
-            > n_traces0
         return U, trace_new, time.monotonic() - t0
 
     def _run_bucket(self, pends: List[_Pending]) -> None:
         spec = pends[0].spec
+        self.metrics.histogram("serve_batch_occupancy",
+                               buckets=(1, 2, 4, 8, 16, 32)
+                               ).observe(len(pends))
         try:
             U, trace_new, solve_s = self._solve_bucket(pends, spec)
         except (KeyboardInterrupt, SystemExit):
@@ -594,6 +682,9 @@ class ClusterServeEngine:
             # a thrown batch solve names no culprit: bisect — survivors
             # re-run, the poisoned half recurses down to one request
             self.stats.n_quarantine_splits += 1
+            _obs_trace.ACTIVE.instant("serve.quarantine_split", cat="serve",
+                                      batch=len(pends),
+                                      bucket=str(spec.key))
             mid = len(pends) // 2
             self._run_bucket(pends[:mid])
             self._run_bucket(pends[mid:])
@@ -639,6 +730,9 @@ class ClusterServeEngine:
                 last = exc
                 if attempt < self.churn_retries:
                     self.stats.n_retried += 1
+                    _obs_trace.ACTIVE.instant(
+                        "serve.retry", cat="serve", req_id=pend.req_id,
+                        attempt=attempt, error=type(exc).__name__)
                     self._sleep(self.retry_backoff_s * (2.0 ** attempt))
         # retries exhausted: cold-solve the edited graph from scratch
         cold = dataclasses.replace(cfg, init_U=None,
@@ -651,6 +745,13 @@ class ClusterServeEngine:
         return res, None, self.churn_retries + 1
 
     def _run_solo(self, pend: _Pending) -> None:
+        with _obs_trace.ACTIVE.span(
+                "serve.solo_solve", cat="serve", req_id=pend.req_id,
+                n=pend.W.n_rows, nnz=pend.W.nnz, k=pend.k,
+                mode="churn" if pend.churn else pend.mode) as sp:
+            self._run_solo_impl(pend, sp)
+
+    def _run_solo_impl(self, pend: _Pending, sp) -> None:
         t0 = time.monotonic()
         self.stats.n_solo += 1
         cfg = dataclasses.replace(self.cfg, k=pend.k)
@@ -660,6 +761,7 @@ class ClusterServeEngine:
                 and pend.mode == "cold":
             pend.degrade = max(pend.degrade,
                                self._degrade_level(t0 - pend.arrival))
+        sp.set(degrade=pend.degrade)
         try:
             if pend.churn and pend.warm_U is not None:
                 res, hierarchy, retries = self._churn_solve(pend, cfg)
@@ -671,6 +773,8 @@ class ClusterServeEngine:
                     pend.W, pend.k, normalized=cfg.normalized_init,
                     seed=cfg.seed)
                 self.stats.n_degraded += 1
+                _obs_trace.ACTIVE.instant("serve.degrade", cat="serve",
+                                          req_id=pend.req_id, level=2)
                 solve_s = time.monotonic() - t0
                 self.stats.solve_s += solve_s
                 self._finish(pend, np.asarray(jnp.linalg.qr(U0)[0]),
@@ -690,6 +794,8 @@ class ClusterServeEngine:
                         cfg, init_U=np.asarray(jnp.linalg.qr(U0)[0]),
                         warm_p_steps=1, multilevel=None)
                     self.stats.n_degraded += 1
+                    _obs_trace.ACTIVE.instant("serve.degrade", cat="serve",
+                                              req_id=pend.req_id, level=1)
                 elif pend.warm_U is not None:
                     cfg = dataclasses.replace(cfg, init_U=pend.warm_U,
                                               multilevel=None)
@@ -720,6 +826,7 @@ class ClusterServeEngine:
             return
         solve_s = time.monotonic() - t0
         self.stats.solve_s += solve_s
+        sp.set(retries=retries)
         p_final = res.p_path[-1] if res.p_path else \
             float(registry.p_schedule(self.cfg)[-1])
         self._finish(pend, np.asarray(res.U), lane="solo", batch_size=1,

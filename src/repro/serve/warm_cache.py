@@ -29,6 +29,7 @@ from typing import Dict, Optional, Tuple
 import numpy as np
 
 from repro.grblas.containers import GraphFingerprint
+from repro.obs import metrics as _obs_metrics
 
 
 @dataclasses.dataclass
@@ -51,19 +52,47 @@ class WarmCache:
     different-weights request finds a warm start in O(1) without
     scanning.  Eviction is strict LRU on the primary map; the pattern
     index never pins an entry alive (it is repaired lazily on lookup).
+
+    Counters live in a :class:`~repro.obs.metrics.MetricsRegistry`
+    (the serve engine passes its own, so engine + cache share one set
+    of books — DESIGN.md §10); ``hits_exact`` & friends remain as
+    read-only views for back compat and ``stats()`` keeps its exact
+    key set.
     """
 
-    def __init__(self, capacity: int = 64):
+    def __init__(self, capacity: int = 64, *,
+                 metrics: "_obs_metrics.MetricsRegistry" = None):
         if capacity < 1:
             raise ValueError("cache capacity must be >= 1")
         self.capacity = int(capacity)
+        self.metrics = metrics if metrics is not None \
+            else _obs_metrics.MetricsRegistry()
         self._lru: "OrderedDict[tuple, CacheEntry]" = OrderedDict()
         self._by_pattern: Dict[tuple, tuple] = {}
-        self.hits_exact = 0
-        self.hits_pattern = 0
-        self.misses = 0
-        self.evictions = 0
-        self.rejects = 0        # poisoned entries refused on insert
+
+    # counter views (the instruments are the source of truth)
+
+    @property
+    def hits_exact(self) -> int:
+        return int(self.metrics.value("warm_cache_hits_total", tier="exact"))
+
+    @property
+    def hits_pattern(self) -> int:
+        return int(self.metrics.value("warm_cache_hits_total",
+                                      tier="pattern"))
+
+    @property
+    def misses(self) -> int:
+        return int(self.metrics.value("warm_cache_misses_total"))
+
+    @property
+    def evictions(self) -> int:
+        return int(self.metrics.value("warm_cache_evictions_total"))
+
+    @property
+    def rejects(self) -> int:
+        """Poisoned entries refused on insert."""
+        return int(self.metrics.value("warm_cache_rejects_total"))
 
     def __len__(self) -> int:
         return len(self._lru)
@@ -83,7 +112,8 @@ class WarmCache:
         entry = self._lru.get(fp.key)
         if entry is not None:
             self._lru.move_to_end(fp.key)
-            self.hits_exact += 1
+            self.metrics.counter("warm_cache_hits_total",
+                                 tier="exact").inc()
             return entry, "exact"
         pkey = self._by_pattern.get(fp.pattern_key)
         if pkey is not None:
@@ -92,9 +122,10 @@ class WarmCache:
                 del self._by_pattern[fp.pattern_key]
             else:
                 self._lru.move_to_end(pkey)
-                self.hits_pattern += 1
+                self.metrics.counter("warm_cache_hits_total",
+                                     tier="pattern").inc()
                 return entry, "pattern"
-        self.misses += 1
+        self.metrics.counter("warm_cache_misses_total").inc()
         return None, None
 
     def store(self, entry: CacheEntry) -> None:
@@ -104,7 +135,7 @@ class WarmCache:
         # this fingerprint.  Refuse the insert, keep any prior healthy
         # entry.
         if entry.U is None or not np.isfinite(entry.U).all():
-            self.rejects += 1
+            self.metrics.counter("warm_cache_rejects_total").inc()
             return
         fp = entry.fingerprint
         self._lru[fp.key] = entry
@@ -112,10 +143,11 @@ class WarmCache:
         self._by_pattern[fp.pattern_key] = fp.key
         while len(self._lru) > self.capacity:
             old_key, old = self._lru.popitem(last=False)
-            self.evictions += 1
+            self.metrics.counter("warm_cache_evictions_total").inc()
             pk = old.fingerprint.pattern_key
             if self._by_pattern.get(pk) == old_key:
                 del self._by_pattern[pk]
+        self.metrics.gauge("warm_cache_size").set(len(self._lru))
 
     def stats(self) -> dict:
         return {"size": len(self._lru), "capacity": self.capacity,

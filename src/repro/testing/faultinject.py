@@ -35,6 +35,8 @@ from repro.core.solvers.registry import SolverReport, SolverState
 from repro.grblas import backends as _backends
 from repro.grblas.backends import BackendUnavailableError
 from repro.grblas.semiring import EdgeSemiring, PairEdgeSemiring
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
 
 
 def chaos_seed(default: int = 0) -> int:
@@ -48,11 +50,22 @@ def chaos_seed(default: int = 0) -> int:
 class InjectionLog:
     """What actually fired: (site, detail) per injected fault.  Tests
     assert on it so a chaos test that silently injected nothing fails
-    loudly instead of vacuously passing."""
+    loudly instead of vacuously passing.
+
+    Each ``record`` also draws a fresh injection id from
+    ``obs.trace.begin_injection`` (stamping a ``fault.<site>`` instant
+    on any active tracer) and bumps ``fault_injections_total{site=}`` on
+    the DEFAULT metrics registry; the recovery ladder's trace events
+    carry the same id (``obs.trace.current_injection``), so a chaos-run
+    timeline reads fault → divergence → rungs as one correlated story."""
 
     events: List[Tuple[str, str]] = dataclasses.field(default_factory=list)
+    ids: List[int] = dataclasses.field(default_factory=list)
 
     def record(self, site: str, detail: str = "") -> None:
+        self.ids.append(_obs_trace.begin_injection(site, detail))
+        _obs_metrics.DEFAULT.counter("fault_injections_total",
+                                     site=site).inc()
         self.events.append((site, detail))
 
     def count(self, site: Optional[str] = None) -> int:

@@ -1,15 +1,28 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH),)
 
-.PHONY: verify imports test test-dist test-serve test-chaos test-obs \
-	dryrun-smoke bench-kernels bench-multilevel bench-dist bench-solvers \
-	bench-serve
+.PHONY: verify imports lint lint-fix test test-dist test-serve test-chaos \
+	test-obs dryrun-smoke bench-kernels bench-multilevel bench-dist \
+	bench-solvers bench-serve
 
-# Mirrors .github/workflows/ci.yml: import health, then the tier-1 suite.
-verify: imports test
+# Mirrors .github/workflows/ci.yml: import health, the pscheck invariant
+# analyzer, then the tier-1 suite.
+verify: imports lint test
 
 imports:
 	$(PY) -m pytest -x -q tests/test_imports.py
+
+# pscheck (repro.analysis, DESIGN.md §11): AST invariant analysis over
+# src/repro.  Fails on any unbaselined finding AND on stale baseline
+# entries (the ledger is shrink-only — fix a violation, shrink the file).
+lint:
+	$(PY) -m repro.analysis src/repro --baseline pscheck_baseline.json
+
+# Apply the mechanical per-rule fixers (np->jnp, mutable defaults) in
+# place, then report what is left.
+lint-fix:
+	$(PY) -m repro.analysis src/repro --fix \
+		--baseline pscheck_baseline.json
 
 test:
 	$(PY) -m pytest -x -q

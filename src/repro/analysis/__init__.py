@@ -1,0 +1,35 @@
+"""pscheck — AST-based invariant analysis for the jax_pallas GraphBLAS
+stack (DESIGN.md §11).
+
+Library::
+
+    from repro import analysis
+    findings = analysis.run(["src/repro"])            # every rule
+    analysis.assert_clean(paths, rules=["hot-purity"])  # pytest facing
+
+CLI::
+
+    python -m repro.analysis src/repro --baseline pscheck_baseline.json
+
+The rule catalogue, suppression syntax (``# pscheck: disable=<rule>
+(reason)``) and the shrink-only baseline contract are documented in
+DESIGN.md §11; per-rule invariants live on the Rule objects
+(``registered_rules()[id].invariant``).
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    ModuleContext,
+    ProjectContext,
+    Rule,
+    apply_baseline,
+    apply_fixes,
+    assert_clean,
+    collect_files,
+    load_baseline,
+    module_rel,
+    register_rule,
+    registered_rules,
+    resolve_rules,
+    run,
+    write_baseline,
+)

@@ -1,0 +1,108 @@
+"""The repo profile: which invariant applies where.
+
+Rules are generic AST checks; this module pins them to the repo's
+actual architecture (DESIGN.md §3-§10).  Paths are module-relative
+("core/plap.py" — see ``core.module_rel``), matched by prefix, so the
+tables read like the package tree.  Fixture files used by the
+self-tests fall outside every scope and get the permissive default —
+scoped rules are exercised there by naming paths that *look* scoped
+(tests construct ModuleContexts with synthetic paths).
+"""
+from __future__ import annotations
+
+from typing import Iterable
+
+# ---------------------------------------------------------- purity scopes
+# Modules forming the solver/kernel hot path: everything here executes
+# (or is traced into) the Newton/Grassmann continuation, so host math
+# libraries are banned outright — not just inside traced scopes.
+SCIPY_BAN = (
+    "core/solvers/",
+    "core/plap.py",
+    "core/grassmann.py",
+    "core/lobpcg.py",
+    "core/kmeans.py",
+    "core/phi.py",
+    "multilevel/",
+    "kernels/",
+    "grblas/semiring.py",
+    "serve/bucketing.py",
+    "serve/psc_engine.py",
+)
+
+# Pure-device modules: numpy itself is banned (jnp only).  Host-side
+# assembly modules (containers, coarsen, serve queueing) legitimately
+# use numpy and are NOT listed — there the traced-scope check applies.
+NUMPY_BAN = (
+    "core/plap.py",
+    "core/grassmann.py",
+    "core/lobpcg.py",
+    "core/kmeans.py",
+    "core/phi.py",
+    "kernels/",
+)
+
+# Galerkin products must route api.mxm: no dense matrix products.
+DENSE_MATMUL_BAN = ("multilevel/",)
+
+# ------------------------------------------------------- boundary scopes
+# Raw jax.ops.segment_sum is the algebra's private reduction: only the
+# grblas package may touch it.
+SEGMENT_SUM_ALLOWED = ("grblas/",)
+
+# The sparse kernel packages are grblas implementation detail — callers
+# go through api.mxm/mxv/vxm.  (flash_attention / kmeans_assign are
+# dense model kernels outside the GraphBLAS boundary.)
+SPARSE_KERNEL_PKGS = ("bsr_spmm", "plap_edge", "sellcs_spmm")
+KERNEL_IMPORT_ALLOWED = ("grblas/", "kernels/")
+
+# Backend registry internals (grblas.backends._REGISTRY et al.) are
+# private to the package.
+BACKEND_PRIVATE_ALLOWED = ("grblas/",)
+
+# ------------------------------------------------------ pad-fold scopes
+# Modules that handle padded sparse layouts (ELL / SELL-C-σ / halo):
+# raw reductions over a pad axis here must be masked, registered as a
+# ring fast path, or capability-gated (inline-suppressed with the gate
+# named).
+PAD_FOLD_SCOPE = (
+    "grblas/backends.py",
+    "grblas/dist.py",
+    "grblas/semiring.py",
+    "kernels/bsr_spmm/",
+    "kernels/plap_edge/",
+    "kernels/sellcs_spmm/",
+)
+
+# ----------------------------------------------------------- dtype scopes
+# Device-feeding subsystems: 64-bit dtypes silently double memory and
+# defeat the int32 index layout (PR-3) when x64 is enabled, so any
+# float64/int64 mention here is explicit debt.
+DTYPE_SCOPE = (
+    "grblas/",
+    "kernels/",
+    "core/",
+    "multilevel/",
+    "serve/psc_engine.py",
+    "serve/bucketing.py",
+)
+
+# Layout-build functions must pin dtypes on every array constructor
+# (np default int64/float64 is exactly the silent promotion).
+LAYOUT_BUILD_PREFIXES = ("_build_",)
+LAYOUT_BUILD_MODULES = ("grblas/containers.py",)
+
+# ----------------------------------------------------- registry locations
+BACKEND_REGISTRY_MODULE = "grblas/backends.py"
+SOLVER_REGISTRY_MODULE = "core/solvers/registry.py"
+SOLVER_PKG = "core/solvers/"
+
+
+def in_scope(rel: str, prefixes: Iterable[str]) -> bool:
+    return any(rel.startswith(p) for p in prefixes)
+
+
+def is_sparse_kernel_module(rel: str) -> bool:
+    return (rel.startswith("kernels/")
+            and len(rel.split("/")) > 1
+            and rel.split("/")[1] in SPARSE_KERNEL_PKGS)

@@ -1,0 +1,92 @@
+"""API-boundary enforcement (DESIGN.md §3).
+
+Every SpMM-shaped operation goes through ``api.mxm/mxv/vxm`` under a
+``Descriptor`` — that is the whole point of the unified execution API
+(PR-2) and the reason new layouts are one ``register_backend`` call.
+Three leak shapes are flagged:
+
+* raw ``jax.ops.segment_sum`` outside ``grblas/`` — the algebra's
+  private reduction; outside the package it bypasses ring dispatch
+  (and was PR-2's original bug: silent segment_sum for non-additive
+  monoids);
+* importing the sparse kernel packages (``kernels/bsr_spmm``,
+  ``plap_edge``, ``sellcs_spmm``) outside ``grblas/`` — kernels are
+  backend implementation detail, reachable only via Descriptor;
+* touching ``grblas.backends`` privates (``_REGISTRY``) outside the
+  package.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import profile
+from repro.analysis.core import Rule, register_rule
+from repro.analysis.scopes import dotted_name
+
+
+def _check_boundary(ctx):
+    rel = ctx.rel
+    in_grblas = profile.in_scope(rel, profile.SEGMENT_SUM_ALLOWED)
+    kernels_ok = profile.in_scope(rel, profile.KERNEL_IMPORT_ALLOWED)
+
+    for n in ast.walk(ctx.tree):
+        # raw segment reduction outside the algebra package
+        if not in_grblas and isinstance(n, ast.Attribute) \
+                and n.attr == "segment_sum":
+            yield ctx.finding(
+                "api-boundary", n,
+                "raw jax.ops.segment_sum outside grblas/ — SpMM-shaped "
+                "reductions go through api.mxm under a ring (PR-2 "
+                "contract; raw segment_sum is wrong for non-additive "
+                "monoids)")
+        # sparse kernel imports outside grblas/
+        if not kernels_ok and isinstance(n, (ast.Import, ast.ImportFrom)):
+            mods = ([a.name for a in n.names] if isinstance(n, ast.Import)
+                    else [n.module or ""])
+            for mod in mods:
+                parts = mod.split(".")
+                if (len(parts) >= 3 and parts[0] == "repro"
+                        and parts[1] == "kernels"
+                        and parts[2] in profile.SPARSE_KERNEL_PKGS):
+                    yield ctx.finding(
+                        "api-boundary", n,
+                        f"direct import of sparse kernel package "
+                        f"{mod} — kernels are backend implementation "
+                        f"detail; dispatch via api.mxm with a Descriptor")
+                elif (parts[:2] == ["repro", "kernels"] and len(parts) == 2
+                      and isinstance(n, ast.ImportFrom)):
+                    names = {a.name for a in n.names}
+                    leaked = {nm for nm in names
+                              for pkg in profile.SPARSE_KERNEL_PKGS
+                              if nm.startswith(pkg.split("_")[0])
+                              or nm.startswith("plap") or nm.startswith(
+                                  "sellcs") or nm.startswith("bsr")}
+                    if leaked:
+                        yield ctx.finding(
+                            "api-boundary", n,
+                            f"sparse kernel entry point(s) "
+                            f"{sorted(leaked)} imported from repro.kernels "
+                            f"— dispatch via api.mxm with a Descriptor")
+        # backend-registry privates outside grblas/
+        if not in_grblas and isinstance(n, ast.Attribute) \
+                and n.attr.startswith("_") and n.attr in ("_REGISTRY",):
+            base = dotted_name(n.value) or ""
+            if base.endswith("backends") or base in ("_backends",):
+                yield ctx.finding(
+                    "api-boundary", n,
+                    "grblas.backends private registry touched outside "
+                    "the package — use registered_backends()/"
+                    "available_backends()")
+
+
+register_rule(Rule(
+    id="api-boundary",
+    summary="SpMM goes through api.mxm; kernels/ and raw segment_sum are "
+            "grblas-private",
+    invariant="No raw jax.ops.segment_sum and no direct sparse-kernel "
+              "imports outside grblas/: the unified API's capability "
+              "checks (ring kind, layout availability, pad soundness) "
+              "only protect call sites that actually dispatch through "
+              "it (DESIGN.md §3).",
+    check=_check_boundary,
+))

@@ -1,0 +1,178 @@
+"""Dtype-hygiene rule.
+
+The repo's device containers are float32 values + int32 indices by
+construction (PR-3 rebuilt the layout builders to allocate target-dtype
+and int32 directly); float64 pipelines opt in *per call* by passing a
+dtype.  The invariant is about what crosses the device boundary — host
+numpy staging code routinely (and correctly) uses int64 fold keys and
+is not this rule's business.
+
+``dtype-hygiene`` flags, inside the device-feeding subsystems
+(``profile.DTYPE_SCOPE``):
+
+* 64-bit dtype references on the **jnp** namespace (``jnp.float64``,
+  ``jax.numpy.int64``) anywhere — device code never hardcodes width; it
+  takes the caller's dtype;
+* ``np.int64``-style or ``"int64"``-string dtypes **fed to a jnp call**
+  (``dtype=`` kwarg or the positional dtype slot) — same hazard spelled
+  through numpy;
+* device-boundary constructors (``jnp.asarray``/``jnp.zeros``/...)
+  with no explicit dtype in the layout-build functions (``_build_*`` in
+  ``grblas/containers.py``), unless the operand is a host array the
+  builder already pinned — under ``jax_enable_x64`` an un-pinned
+  boundary crossing silently doubles index/value memory, and at the
+  8M-node capstone that is gigabytes.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import profile
+from repro.analysis.core import Rule, register_rule
+from repro.analysis.scopes import dotted_name
+
+_WIDE = ("int64", "float64", "uint64", "complex128")
+_JNP = ("jnp", "jax.numpy")
+_NP = ("np", "numpy")
+_CONSTRUCTORS = frozenset({"zeros", "ones", "empty", "full", "arange",
+                           "asarray", "array"})
+# (fn -> n_positional_args) at which a positional dtype is present
+_POSITIONAL_DTYPE_AT = {"zeros": 2, "ones": 2, "empty": 2, "full": 3,
+                        "asarray": 2, "array": 2, "arange": 4}
+
+
+def _wide_ref(node) -> str:
+    """'jnp.float64' / "'int64'" for a 64-bit dtype expression, '' else."""
+    if isinstance(node, ast.Attribute) and node.attr in _WIDE:
+        base = dotted_name(node.value) or ""
+        if base in _JNP + _NP:
+            return f"{base}.{node.attr}"
+    if isinstance(node, ast.Constant) and node.value in _WIDE:
+        return repr(node.value)
+    return ""
+
+
+def _split_api(call: ast.Call):
+    """('jnp'|'np'|'', fn_name) for a np/jnp module-level call."""
+    name = dotted_name(call.func) or ""
+    head, _, fn = name.rpartition(".")
+    if head in _JNP:
+        return "jnp", fn
+    if head in _NP:
+        return "np", fn
+    return "", fn
+
+
+def _dtype_operand(call: ast.Call):
+    """The expression occupying the dtype slot of a constructor call."""
+    for kw in call.keywords:
+        if kw.arg == "dtype":
+            return kw.value
+    _, fn = _split_api(call)
+    at = _POSITIONAL_DTYPE_AT.get(fn)
+    if at is not None and len(call.args) >= at:
+        return call.args[at - 1]
+    return None
+
+
+def _check_wide(ctx):
+    """64-bit hardcodes that reach the device."""
+    # jnp-namespace 64-bit literal anywhere in scope
+    for n in ast.walk(ctx.tree):
+        wide = _wide_ref(n)
+        if not wide:
+            continue
+        if wide.split(".", 1)[0] in _JNP:
+            yield ctx.finding(
+                "dtype-hygiene", n,
+                f"64-bit device dtype {wide} hardcoded — hot-path code "
+                f"takes the caller's dtype; widen per call, not in the "
+                f"module (or suppress naming why 64-bit is structural)")
+    # np 64-bit / "int64" string in the dtype slot of a jnp call
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        api, _ = _split_api(n)
+        if api != "jnp":
+            continue
+        dt = _dtype_operand(n)
+        if dt is None:
+            continue
+        wide = _wide_ref(dt)
+        if wide and wide.split(".", 1)[0] not in _JNP:
+            yield ctx.finding(
+                "dtype-hygiene", dt,
+                f"64-bit dtype {wide} fed to a jnp constructor — device "
+                f"arrays take the caller's dtype (or suppress naming "
+                f"why 64-bit is structural)")
+
+
+def _pinned_locals(fn: ast.AST) -> set:
+    """Names bound in ``fn`` by expressions with a pinned dtype: a
+    constructor carrying an explicit dtype (kwarg or positional slot)
+    or an ``.astype(...)`` result."""
+    pinned = set()
+    for n in ast.walk(fn):
+        if not isinstance(n, ast.Assign) or len(n.targets) != 1:
+            continue
+        tgt = n.targets[0]
+        if not isinstance(tgt, ast.Name):
+            continue
+        v = n.value
+        if not isinstance(v, ast.Call):
+            continue
+        if isinstance(v.func, ast.Attribute) and v.func.attr == "astype":
+            pinned.add(tgt.id)
+        elif _dtype_operand(v) is not None:
+            pinned.add(tgt.id)
+    return pinned
+
+
+def _check_builders(ctx):
+    """Layout builders pin dtype on every device-boundary constructor."""
+    if ctx.rel not in profile.LAYOUT_BUILD_MODULES:
+        return
+    for fn in ast.walk(ctx.tree):
+        if not isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not fn.name.startswith(profile.LAYOUT_BUILD_PREFIXES):
+            continue
+        pinned = _pinned_locals(fn)
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call):
+                continue
+            api, f = _split_api(sub)
+            if api != "jnp" or f not in _CONSTRUCTORS:
+                continue
+            if _dtype_operand(sub) is not None:
+                continue
+            if (sub.args and isinstance(sub.args[0], ast.Name)
+                    and sub.args[0].id in pinned):
+                continue        # host array already pinned; jnp preserves it
+            yield ctx.finding(
+                "dtype-hygiene", sub,
+                f"jnp.{f}() without an explicit dtype at the device "
+                f"boundary of a layout builder — under x64 this "
+                f"silently widens the layout to int64/float64; pin "
+                f"int32 for indices / the target dtype for values "
+                f"(PR-3 invariant)")
+
+
+def _check(ctx):
+    if not profile.in_scope(ctx.rel, profile.DTYPE_SCOPE):
+        return
+    yield from _check_wide(ctx)
+    yield from _check_builders(ctx)
+
+
+register_rule(Rule(
+    id="dtype-hygiene",
+    summary="no hardcoded 64-bit device dtypes; layout builders pin "
+            "every boundary constructor",
+    invariant="Device containers are caller-dtype values + int32 indices; "
+              "device code never hardcodes jnp 64-bit dtypes (or feeds np "
+              "64-bit into jnp constructors) and layout builders pin dtype "
+              "on every device-boundary constructor, so enabling x64 "
+              "cannot silently double index/value memory.",
+    check=_check,
+))

@@ -1,0 +1,150 @@
+"""Host-sync / concretization-hazard rules.
+
+Inside a traced scope (jit/vmap/scan/pallas_call body — see
+``analysis.scopes``), pulling a value out of the trace blocks on the
+device and usually poisons the compiled artifact:
+
+* ``host-sync`` — ``.item()``, ``float()/int()/bool()/complex()`` on a
+  traced value, ``np.asarray``/``jax.device_get`` of a tracer.  At
+  8M-node scale (ROADMAP capstone) one hidden sync per Newton step is a
+  100x regression, not a test failure.
+* ``traced-branch`` — a Python ``if``/``while``/``assert`` whose test
+  calls into jnp: data-dependent control flow cannot trace
+  (ConcretizationTypeError at best, silently-baked branch at worst);
+  use ``lax.cond``/``jnp.where``.
+
+Both rules key off names *bound in the traced scope* (params, locals):
+closure constants (cfg fields, static python ints) concretize fine and
+are not flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register_rule
+from repro.analysis.scopes import dotted_name
+
+_CONCRETIZERS = ("float", "int", "bool", "complex")
+_PULL_CALLS = frozenset({
+    "np.asarray", "np.array", "numpy.asarray", "numpy.array",
+    "jax.device_get",
+})
+# attribute/call names that yield static python values even on tracers
+_STATIC_ATTRS = frozenset({"ndim", "shape", "dtype", "size"})
+
+
+def _static_only(node: ast.AST, local_names) -> bool:
+    """True when every local-name read in ``node`` goes through a static
+    attribute (shape/ndim/dtype/size) or len()."""
+    class V(ast.NodeVisitor):
+        dynamic = False
+
+        def visit_Attribute(self, a):
+            if a.attr in _STATIC_ATTRS:
+                return          # don't descend: x.shape is static
+            self.generic_visit(a)
+
+        def visit_Call(self, c):
+            if isinstance(c.func, ast.Name) and c.func.id == "len":
+                return          # len(static tuple) — don't descend
+            self.generic_visit(c)
+
+        def visit_Name(self, nm):
+            if nm.id in local_names:
+                self.dynamic = True
+
+    v = V()
+    v.visit(node)
+    return not v.dynamic
+
+
+def _check_hostsync(ctx):
+    scopes = ctx.scopes
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        traced = scopes.enclosing_traced(n)
+        if traced is None:
+            continue
+        local_names = scopes.locals_of(traced)
+        name = dotted_name(n.func)
+        # .item() on anything inside a trace
+        if (isinstance(n.func, ast.Attribute) and n.func.attr == "item"
+                and not n.args):
+            yield ctx.finding(
+                "host-sync", n,
+                ".item() inside a traced scope — device sync per call; "
+                "keep the value on device or hoist to the host caller")
+            continue
+        if name in _PULL_CALLS:
+            if n.args and _static_only(n.args[0], local_names):
+                continue
+            yield ctx.finding(
+                "host-sync", n,
+                f"{name}() inside a traced scope pulls the operand off "
+                f"the trace — use jnp (stays traced) or hoist to host")
+            continue
+        if (isinstance(n.func, ast.Name) and n.func.id in _CONCRETIZERS
+                and n.args):
+            arg = n.args[0]
+            if isinstance(arg, ast.Constant):
+                continue
+            if _static_only(arg, local_names):
+                continue
+            yield ctx.finding(
+                "host-sync", n,
+                f"{n.func.id}() concretizes a traced value — "
+                f"ConcretizationTypeError under jit, silent device sync "
+                f"under eager; use jnp casts (.astype) or hoist")
+
+
+register_rule(Rule(
+    id="host-sync",
+    summary="no concretization of traced values inside jit/vmap/pallas "
+            "scopes",
+    invariant="Code inside a traced scope never calls .item(), "
+              "float()/int()/bool() on traced values, np.asarray/"
+              "jax.device_get on tracers — each is a host round-trip "
+              "(or trace-time constant) invisible to benchmarks until "
+              "it is a 100x regression at paper scale.",
+    check=_check_hostsync,
+))
+
+
+def _test_calls_jnp(test: ast.AST) -> bool:
+    for sub in ast.walk(test):
+        if isinstance(sub, ast.Call):
+            name = dotted_name(sub.func) or ""
+            head = name.split(".", 1)[0]
+            if head in ("jnp", "jax", "lax"):
+                return True
+    return False
+
+
+def _check_traced_branch(ctx):
+    scopes = ctx.scopes
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, (ast.If, ast.While, ast.Assert, ast.IfExp)):
+            continue
+        if scopes.enclosing_traced(n) is None:
+            continue
+        if _test_calls_jnp(n.test):
+            kind = {"If": "if", "While": "while", "Assert": "assert",
+                    "IfExp": "conditional expression"}[type(n).__name__]
+            yield ctx.finding(
+                "traced-branch", n,
+                f"python {kind} on a jnp expression inside a traced "
+                f"scope — data-dependent control flow cannot trace; use "
+                f"lax.cond / jnp.where / checkify")
+
+
+register_rule(Rule(
+    id="traced-branch",
+    summary="no python control flow on jnp values inside traced scopes",
+    invariant="Branch decisions inside jit/vmap/scan bodies are made "
+              "with lax.cond/lax.while_loop/jnp.where, never python "
+              "if/while/assert on a traced expression — those either "
+              "raise ConcretizationTypeError or silently bake one "
+              "branch at trace time.",
+    check=_check_traced_branch,
+))

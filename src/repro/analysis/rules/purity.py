@@ -1,0 +1,193 @@
+"""Hot-path purity rules.
+
+``hot-purity`` generalizes the three ad-hoc ``read_text()`` scans the
+repo grew (tests/test_solver_registry.py, tests/test_multilevel.py,
+tests/test_grblas_api.py): the continuation hot loop — solver drivers,
+the p-Laplacian operator stack, Pallas kernel bodies, the serve bucket
+lane — must stay on the jnp/grblas algebra.  A numpy or scipy call
+there is either a silent host sync (inside a trace) or a dense
+formulation the paper's GraphBLAS claim forbids.
+
+``dense-matmul`` is the multilevel acceptance contract from PR-4:
+Galerkin coarse operators are built exclusively through ``api.mxm`` —
+no ``@``, no einsum, no ``.toarray()`` densification.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis import profile
+from repro.analysis.core import Rule, register_rule
+from repro.analysis.scopes import dotted_name
+
+_HOST_MODULES = ("np", "numpy", "scipy", "sp")
+
+# np.<fn> -> jnp.<fn> rewrites that are drop-in on array math (the jnp
+# API is a superset with identical semantics for these); used by the
+# hot-purity fixer.
+_SAFE_NP_TO_JNP = frozenset({
+    "abs", "sum", "maximum", "minimum", "sqrt", "exp", "log", "where",
+    "clip", "stack", "concatenate", "zeros_like", "ones_like", "sign",
+    "argmin", "argmax", "mean", "dot", "square", "tanh", "floor", "ceil",
+})
+
+
+def _module_of(call_name: str) -> str:
+    head = call_name.split(".", 1)[0]
+    if head in ("np", "numpy"):
+        return "numpy"
+    if head in ("scipy", "sp"):
+        return "scipy"
+    return ""
+
+
+def _imports(ctx):
+    """Imported top-level module names -> canonical library name."""
+    out = {}
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, ast.Import):
+            for a in n.names:
+                root = a.name.split(".")[0]
+                if root in ("numpy", "scipy"):
+                    out[a.asname or root] = root
+        elif isinstance(n, ast.ImportFrom) and n.module:
+            root = n.module.split(".")[0]
+            if root in ("numpy", "scipy"):
+                out.setdefault(root, root)
+    return out
+
+
+def _check_purity(ctx):
+    rel = ctx.rel
+    ban_scipy = profile.in_scope(rel, profile.SCIPY_BAN)
+    ban_numpy = profile.in_scope(rel, profile.NUMPY_BAN)
+    imported = _imports(ctx)
+
+    # import statements in banned modules fail at the import line — the
+    # clearest possible location for "this package must not know scipy"
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.Import, ast.ImportFrom)):
+            names = ([a.name for a in n.names] if isinstance(n, ast.Import)
+                     else [n.module or ""])
+            for name in names:
+                root = name.split(".")[0]
+                if root == "scipy" and ban_scipy:
+                    yield ctx.finding(
+                        "hot-purity", n,
+                        "scipy import in a hot-path module — the solver/"
+                        "kernel stack runs on the grblas algebra only")
+                elif root == "numpy" and ban_numpy:
+                    yield ctx.finding(
+                        "hot-purity", n,
+                        "numpy import in a pure-device module — use jnp")
+
+    # calls: banned-module calls anywhere in scoped files, and numpy/
+    # scipy calls inside *traced* scopes everywhere (the serve bucket
+    # lane, driver jit bodies, scan/vmap closures)
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = dotted_name(n.func)
+        if not name:
+            continue
+        lib = _module_of(name)
+        if not lib or name.split(".", 1)[0] not in (
+                set(imported) | {"np", "scipy"}):
+            continue
+        if lib == "scipy" and ban_scipy:
+            yield ctx.finding(
+                "hot-purity", n,
+                f"scipy call {name}() in a hot-path module")
+        elif lib == "numpy" and ban_numpy:
+            yield ctx.finding(
+                "hot-purity", n,
+                f"numpy call {name}() in a pure-device module — use jnp")
+        elif ctx.scopes.enclosing_traced(n) is not None:
+            yield ctx.finding(
+                "hot-purity", n,
+                f"{lib} call {name}() inside a traced scope — this "
+                f"executes at trace time on the host (silent sync or "
+                f"baked constant), not in the compiled computation")
+
+
+def _fix_purity(ctx, findings):
+    """Rewrite np.<fn> -> jnp.<fn> for the whitelisted drop-in subset,
+    provided the module already imports jax.numpy as jnp.  Non-math
+    violations (scipy, np.asarray, layout construction) are left for a
+    human — they change where data lives, not just which library runs
+    the arithmetic."""
+    if "import jax.numpy as jnp" not in ctx.source:
+        return None
+    lines = ctx.source.splitlines(keepends=True)
+    flagged = {f.line for f in findings}
+    changed = False
+    for n in ast.walk(ctx.tree):
+        if not (isinstance(n, ast.Call) and n.lineno in flagged):
+            continue
+        name = dotted_name(n.func)
+        if not name or "." not in name:
+            continue
+        head, _, fn = name.partition(".")
+        if head not in ("np", "numpy") or fn not in _SAFE_NP_TO_JNP:
+            continue
+        i = n.func.lineno - 1
+        old = f"{head}.{fn}"
+        if old in lines[i]:
+            lines[i] = lines[i].replace(old, f"jnp.{fn}", 1)
+            changed = True
+    return "".join(lines) if changed else None
+
+
+register_rule(Rule(
+    id="hot-purity",
+    summary="no numpy/scipy reachable from the solver/kernel hot path",
+    invariant="Solver drivers, the plap/grassmann/lobpcg stack, Pallas "
+              "kernel bodies and the serve bucket lane consume the grblas "
+              "algebra (api.mxm rings) only; numpy/scipy there is host "
+              "math the paper's GraphBLAS claim forbids, and inside any "
+              "traced scope it executes at trace time instead of in the "
+              "compiled computation.",
+    check=_check_purity,
+    fix=_fix_purity,
+))
+
+
+_DENSE_CALLS = frozenset({
+    "matmul", "dot", "einsum", "tensordot", "vdot", "inner", "outer",
+})
+
+
+def _check_dense(ctx):
+    if not profile.in_scope(ctx.rel, profile.DENSE_MATMUL_BAN):
+        return
+    for n in ast.walk(ctx.tree):
+        if (isinstance(n, ast.BinOp) and isinstance(n.op, ast.MatMult)):
+            yield ctx.finding(
+                "dense-matmul", n,
+                "dense '@' product — Galerkin/coarse operators route "
+                "through api.mxm (spgemm backend)")
+        elif isinstance(n, ast.Call):
+            name = dotted_name(n.func) or ""
+            head, _, fn = name.rpartition(".")
+            if fn in _DENSE_CALLS and head in ("np", "numpy", "jnp",
+                                               "jax.numpy"):
+                yield ctx.finding(
+                    "dense-matmul", n,
+                    f"dense product {name}() — route through api.mxm")
+            elif fn == "toarray" or (name == "toarray"):
+                yield ctx.finding(
+                    "dense-matmul", n,
+                    "sparse->dense densification (.toarray()) in the "
+                    "multilevel package")
+
+
+register_rule(Rule(
+    id="dense-matmul",
+    summary="multilevel coarse operators are built via api.mxm only",
+    invariant="The Galerkin triple product P^T (W P) and every other "
+              "coarse-operator construction goes through the spgemm "
+              "backend of api.mxm — no dense '@'/matmul/einsum/"
+              "tensordot and no .toarray() densification in "
+              "repro/multilevel/.",
+    check=_check_dense,
+))

@@ -1,0 +1,258 @@
+"""Retrace-hazard rules — the compile-time complement of the runtime
+detector in ``obs/retrace.py``.
+
+The repo's one-trace-per-bucket / one-trace-per-schedule contracts
+(PR-3, PR-7) die by a thousand cuts: a fresh ``jax.jit`` object per
+loop iteration, an unhashable config object passed positionally, a
+mutable default argument changing identity per call.  The runtime
+detector sees the recompiles after they happen; these rules flag the
+shapes of code that cause them before anything runs.
+
+* ``retrace-static`` — a jitted function whose signature takes a
+  config/descriptor/ring object with no ``static_argnames``: every call
+  with a fresh instance retraces (or fails to hash).
+* ``retrace-loop-jit`` — ``jax.jit(...)``/``pl.pallas_call`` executed
+  inside a ``for``/``while`` body: a new callable per iteration means a
+  new trace per iteration.  Route through ``registry.memoized``.
+* ``retrace-mutable-default`` — ``def f(x, opts={})`` in a traced or
+  jit-wrapped function: the default's identity is fresh per process and
+  its mutation invisible to the trace cache.  Fixed mechanically by the
+  shipped fixer (``opts=None`` + a guard line).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register_rule
+from repro.analysis.scopes import (JIT_CALLS, dotted_name, is_tracing_decorator,
+                                   unwrap_partial)
+
+_CONFIG_PARAMS = frozenset({
+    "cfg", "config", "desc", "descriptor", "ring", "semiring", "state",
+})
+
+# memoization shims that make a loop-local jit safe
+_MEMO_CALLS = frozenset({"memoized", "registry.memoized"})
+
+
+def _jit_kwargs(call: ast.Call):
+    return {kw.arg for kw in call.keywords if kw.arg}
+
+
+def _has_statics(call: ast.Call) -> bool:
+    return bool(_jit_kwargs(call) & {"static_argnames", "static_argnums"})
+
+
+def _decorator_has_statics(dec: ast.AST) -> bool:
+    return isinstance(dec, ast.Call) and _has_statics(dec)
+
+
+def _def_config_params(d) -> list:
+    args = d.args
+    names = [a.arg for a in (args.posonlyargs + args.args + args.kwonlyargs)]
+    return [nm for nm in names if nm in _CONFIG_PARAMS]
+
+
+def _check_static(ctx):
+    # decorated defs
+    for n in ast.walk(ctx.tree):
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            for dec in n.decorator_list:
+                if not is_tracing_decorator(dec):
+                    continue
+                name = dotted_name(dec if not isinstance(dec, ast.Call)
+                                   else dec.func)
+                target = dec
+                if (isinstance(dec, ast.Call)
+                        and dotted_name(dec.func) not in JIT_CALLS):
+                    # partial(jax.jit, ...) form
+                    if not (dec.args
+                            and dotted_name(dec.args[0]) in JIT_CALLS):
+                        continue
+                if name not in JIT_CALLS and not (
+                        isinstance(dec, ast.Call) and dec.args
+                        and dotted_name(dec.args[0]) in JIT_CALLS):
+                    continue
+                bad = _def_config_params(n)
+                if bad and not (isinstance(target, ast.Call)
+                                and _has_statics(target)):
+                    yield ctx.finding(
+                        "retrace-static", n,
+                        f"jitted def takes config-like parameter(s) "
+                        f"{', '.join(bad)} without static_argnames — an "
+                        f"unhashable instance fails to trace, a fresh "
+                        f"frozen instance retraces per call; mark static "
+                        f"or close over it")
+        if isinstance(n, ast.Call) and dotted_name(n.func) in JIT_CALLS:
+            if _has_statics(n):
+                continue
+            tgt = unwrap_partial(n.args[0]) if n.args else None
+            d = None
+            if isinstance(tgt, (ast.Lambda,)):
+                d = tgt
+            elif isinstance(tgt, ast.Name):
+                for cand in ctx.scopes._by_name.get(tgt.id, []):
+                    d = cand
+            if d is None:
+                continue
+            bad = _def_config_params(d)
+            if bad:
+                yield ctx.finding(
+                    "retrace-static", n,
+                    f"jax.jit over a callable taking config-like "
+                    f"parameter(s) {', '.join(bad)} without "
+                    f"static_argnames — close over the config or mark it "
+                    f"static")
+
+
+register_rule(Rule(
+    id="retrace-static",
+    summary="jitted signatures taking config objects declare them static",
+    invariant="A function jitted with a PSCConfig/Descriptor/ring-shaped "
+              "parameter must name it in static_argnames (or close over "
+              "it): config objects are not pytrees of arrays, so passing "
+              "them traced either fails to hash or silently retraces on "
+              "every fresh instance — the compile-time face of "
+              "obs/retrace.py's runtime detector.",
+    check=_check_static,
+))
+
+
+def _enclosing_loop(ctx, node):
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, (ast.For, ast.While, ast.AsyncFor)):
+            return anc
+        if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef,
+                            ast.Lambda)):
+            # a def inside the loop is a fresh scope: creating a jit
+            # inside a *function defined in* a loop is that function's
+            # problem at its own call sites
+            return None
+    return None
+
+
+def _under_memo(ctx, node) -> bool:
+    """Is this jit creation inside a build-callable handed to the
+    registry memo (``registry.memoized(key, build)``) — or inside a def
+    whose result feeds it?"""
+    for anc in ctx.ancestors(node):
+        if isinstance(anc, ast.Call):
+            nm = dotted_name(anc.func) or ""
+            if nm in _MEMO_CALLS or nm.endswith(".memoized"):
+                return True
+    return False
+
+
+def _check_loop_jit(ctx):
+    for n in ast.walk(ctx.tree):
+        if not (isinstance(n, ast.Call) and dotted_name(n.func) in JIT_CALLS):
+            continue
+        loop = _enclosing_loop(ctx, n)
+        if loop is None or _under_memo(ctx, n):
+            continue
+        yield ctx.finding(
+            "retrace-loop-jit", n,
+            "jit/pallas_call constructed inside a loop body — a fresh "
+            "callable per iteration traces per iteration; hoist it or "
+            "route through registry.memoized")
+
+
+register_rule(Rule(
+    id="retrace-loop-jit",
+    summary="no fresh jit/pallas callables constructed per loop iteration",
+    invariant="The p-continuation and serve lanes hold one compiled "
+              "callable per execution signature (registry.memoized / "
+              "SOLVER_TRACES); constructing jax.jit or pl.pallas_call "
+              "inside a for/while body defeats the cache because the "
+              "callable's identity is fresh each pass.",
+    check=_check_loop_jit,
+))
+
+
+def _mutable_defaults(d):
+    args = d.args
+    out = []
+    for a, default in zip(
+            (args.posonlyargs + args.args)[-len(args.defaults):]
+            if args.defaults else [], args.defaults):
+        if _is_mutable(default):
+            out.append((a.arg, default))
+    for a, default in zip(args.kwonlyargs, args.kw_defaults):
+        if default is not None and _is_mutable(default):
+            out.append((a.arg, default))
+    return out
+
+
+def _is_mutable(node) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        return dotted_name(node.func) in ("list", "dict", "set")
+    return False
+
+
+def _check_mutable_default(ctx):
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        if not ctx.scopes.is_traced_def(n):
+            continue
+        for name, default in _mutable_defaults(n):
+            yield ctx.finding(
+                "retrace-mutable-default", default,
+                f"mutable default {name}={ast.unparse(default)} on a "
+                f"traced def — default identity/content changes escape "
+                f"the trace cache; default to None and guard in the body")
+
+
+def _fix_mutable_default(ctx, findings):
+    """Mechanical B006-style repair: ``opts={}`` becomes ``opts=None``
+    plus an ``if opts is None: opts = {}`` guard as the first body
+    statement.  Only fires on single-line defs whose default literal is
+    textually unambiguous on its line."""
+    lines = ctx.source.splitlines()
+    edits = []     # (def node, param name, default node)
+    for n in ast.walk(ctx.tree):
+        if not isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for name, default in _mutable_defaults(n):
+            if any(f.line == default.lineno for f in findings):
+                edits.append((n, name, default))
+    if not edits:
+        return None
+    changed = False
+    # textual edits bottom-up so line numbers stay valid
+    for d, name, default in sorted(edits, key=lambda e: -e[2].lineno):
+        i = default.lineno - 1
+        literal = ast.unparse(default)
+        frag = f"{name}={literal}"
+        if frag not in lines[i]:
+            continue
+        lines[i] = lines[i].replace(frag, f"{name}=None", 1)
+        body_line = d.body[0].lineno - 1
+        indent = " " * (len(lines[body_line])
+                        - len(lines[body_line].lstrip()))
+        guard = f"{indent}if {name} is None:\n{indent}    {name} = {literal}"
+        # insert after a docstring, before the first real statement
+        insert_at = body_line
+        first = d.body[0]
+        if (isinstance(first, ast.Expr)
+                and isinstance(first.value, ast.Constant)
+                and isinstance(first.value.value, str) and len(d.body) > 1):
+            insert_at = d.body[1].lineno - 1
+        lines.insert(insert_at, guard)
+        changed = True
+    return "\n".join(lines) + "\n" if changed else None
+
+
+register_rule(Rule(
+    id="retrace-mutable-default",
+    summary="no mutable default arguments on traced defs",
+    invariant="Defaults on jitted/traced signatures must be hashable "
+              "constants: a {}/[] default is one shared mutable object "
+              "whose content changes invisibly to the trace cache (and "
+              "whose identity differs across processes, breaking "
+              "persistent-cache keys).",
+    check=_check_mutable_default,
+    fix=_fix_mutable_default,
+))

@@ -1,0 +1,220 @@
+"""Traced-scope detection: which function bodies run under a JAX trace.
+
+The host-sync, retrace, and purity rules all need the same structural
+fact — "this statement executes inside jit/vmap/scan/pallas_call", i.e.
+its values are tracers, not numbers.  ``ScopeInfo`` computes a
+conservative per-module approximation once, shared via
+``ModuleContext.scopes``:
+
+1. a def/lambda is traced when it is decorated with a tracing transform
+   (``@jax.jit``, ``@partial(jax.jit, ...)``), or passed to one
+   (``jax.jit(run)``, ``lax.scan(body, ...)``, ``pl.pallas_call(kernel,
+   ...)``, incl. through ``functools.partial``);
+2. a def nested inside a traced def is traced;
+3. a module-level def *called* from a traced body is traced (same-module
+   call-graph closure — cross-module closure is deliberately out of
+   scope, the callee module is scanned on its own).
+
+The approximation is conservative in the safe direction: code we cannot
+prove traced is treated as host code, so every flag the dependent rules
+raise is on a line that genuinely executes under a trace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set
+
+# call targets whose callable arguments are traced
+TRACING_CALLS = frozenset({
+    "jax.jit", "jit",
+    "jax.vmap", "vmap", "jax.pmap", "pmap",
+    "jax.lax.scan", "lax.scan",
+    "jax.lax.while_loop", "lax.while_loop",
+    "jax.lax.fori_loop", "lax.fori_loop",
+    "jax.lax.cond", "lax.cond",
+    "jax.lax.switch", "lax.switch",
+    "jax.lax.map", "lax.map",
+    "jax.lax.associative_scan", "lax.associative_scan",
+    "pl.pallas_call", "pallas_call",
+    "jax.checkpoint", "jax.remat",
+    "jax.grad", "jax.value_and_grad", "jax.jacfwd", "jax.jacrev",
+    "jax.vjp", "jax.jvp", "jax.linearize",
+    "shard_map", "jax.experimental.shard_map.shard_map",
+})
+
+# the subset that compiles a fresh executable per *callable object*
+JIT_CALLS = frozenset({"jax.jit", "jit", "pl.pallas_call", "pallas_call"})
+
+PALLAS_CALLS = frozenset({"pl.pallas_call", "pallas_call"})
+
+PARTIAL_CALLS = frozenset({"partial", "functools.partial", "ft.partial"})
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """'a.b.c' for a Name/Attribute chain, else None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return None
+
+
+def unwrap_partial(node: ast.AST) -> ast.AST:
+    """partial(f, ...) -> f (recursively)."""
+    while (isinstance(node, ast.Call)
+           and dotted_name(node.func) in PARTIAL_CALLS and node.args):
+        node = node.args[0]
+    return node
+
+
+def is_tracing_decorator(dec: ast.AST) -> bool:
+    name = dotted_name(dec)
+    if name in TRACING_CALLS:
+        return True
+    if isinstance(dec, ast.Call):
+        fn = dotted_name(dec.func)
+        if fn in TRACING_CALLS:
+            return True
+        if fn in PARTIAL_CALLS and dec.args:
+            return dotted_name(dec.args[0]) in TRACING_CALLS
+    return False
+
+
+_DEF_NODES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)
+
+
+class ScopeInfo:
+    """Per-module traced-scope map (see module docstring for the rules)."""
+
+    def __init__(self, ctx):
+        self.ctx = ctx
+        self.defs: List[ast.AST] = [
+            n for n in ast.walk(ctx.tree) if isinstance(n, _DEF_NODES)]
+        self._by_name: Dict[str, List[ast.AST]] = {}
+        for d in self.defs:
+            if isinstance(d, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self._by_name.setdefault(d.name, []).append(d)
+        # lambdas bound to a simple name participate in name lookup too
+        for n in ast.walk(ctx.tree):
+            if (isinstance(n, ast.Assign) and len(n.targets) == 1
+                    and isinstance(n.targets[0], ast.Name)
+                    and isinstance(n.value, ast.Lambda)):
+                self._by_name.setdefault(n.targets[0].id, []).append(n.value)
+        self.traced: Set[int] = set()
+        self.pallas: Set[int] = set()
+        self._locals: Dict[int, Set[str]] = {}
+        self._build()
+
+    # ------------------------------------------------------------- build
+    def _mark(self, node: ast.AST, pallas: bool = False) -> bool:
+        node = unwrap_partial(node)
+        changed = False
+        if isinstance(node, _DEF_NODES):
+            if id(node) not in self.traced:
+                self.traced.add(id(node))
+                changed = True
+            if pallas and id(node) not in self.pallas:
+                self.pallas.add(id(node))
+                changed = True
+        elif isinstance(node, ast.Name):
+            for d in self._by_name.get(node.id, []):
+                if id(d) not in self.traced:
+                    self.traced.add(id(d))
+                    changed = True
+                if pallas:
+                    self.pallas.add(id(d))
+        return changed
+
+    def _build(self) -> None:
+        # seeds: decorators and callable args of tracing entry points
+        for d in self.defs:
+            for dec in getattr(d, "decorator_list", []):
+                if is_tracing_decorator(dec):
+                    self._mark(d)
+        for n in ast.walk(self.ctx.tree):
+            if not isinstance(n, ast.Call):
+                continue
+            fn = dotted_name(n.func)
+            if fn not in TRACING_CALLS:
+                continue
+            pallas = fn in PALLAS_CALLS
+            for arg in list(n.args) + [kw.value for kw in n.keywords]:
+                self._mark(arg, pallas=pallas)
+        # closure: nested defs + same-module callees of traced bodies
+        changed = True
+        while changed:
+            changed = False
+            for d in self.defs:
+                if id(d) not in self.traced:
+                    continue
+                for sub in ast.walk(d):
+                    if isinstance(sub, _DEF_NODES) and sub is not d:
+                        if id(sub) not in self.traced:
+                            self.traced.add(id(sub))
+                            changed = True
+                    if isinstance(sub, ast.Call):
+                        callee = sub.func
+                        if (isinstance(callee, ast.Name)
+                                and callee.id in self._by_name):
+                            for cd in self._by_name[callee.id]:
+                                if id(cd) not in self.traced:
+                                    self.traced.add(id(cd))
+                                    changed = True
+
+    # ------------------------------------------------------------ queries
+    def is_traced_def(self, node: ast.AST) -> bool:
+        return id(node) in self.traced
+
+    def is_pallas_def(self, node: ast.AST) -> bool:
+        return id(node) in self.pallas
+
+    def enclosing_traced(self, node: ast.AST) -> Optional[ast.AST]:
+        """The nearest enclosing *traced* def of ``node``, or None when
+        the statement runs on the host."""
+        d = self.ctx.enclosing_def(node)
+        while d is not None:
+            if self.is_traced_def(d):
+                return d
+            d = self.ctx.enclosing_def(d)
+        return None
+
+    def locals_of(self, d: ast.AST) -> Set[str]:
+        """Names bound inside def ``d`` (params + assignments + loop
+        targets).  Values these names carry are tracers when ``d`` is
+        traced; names *not* in this set are closure constants."""
+        cached = self._locals.get(id(d))
+        if cached is not None:
+            return cached
+        names: Set[str] = set()
+        args = getattr(d, "args", None)
+        if args is not None:
+            for a in (args.posonlyargs + args.args + args.kwonlyargs):
+                names.add(a.arg)
+            for a in (args.vararg, args.kwarg):
+                if a is not None:
+                    names.add(a.arg)
+
+        def collect_target(t):
+            for sub in ast.walk(t):
+                if isinstance(sub, ast.Name):
+                    names.add(sub.id)
+
+        body = d.body if isinstance(d.body, list) else [d.body]
+        for stmt in body:
+            for sub in ast.walk(stmt):
+                if isinstance(sub, ast.Assign):
+                    for t in sub.targets:
+                        collect_target(t)
+                elif isinstance(sub, (ast.AugAssign, ast.AnnAssign,
+                                      ast.For, ast.AsyncFor)):
+                    collect_target(sub.target)
+                elif isinstance(sub, ast.withitem):
+                    if sub.optional_vars is not None:
+                        collect_target(sub.optional_vars)
+                elif isinstance(sub, ast.comprehension):
+                    collect_target(sub.target)
+        self._locals[id(d)] = names
+        return names

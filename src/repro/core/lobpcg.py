@@ -64,7 +64,7 @@ def lobpcg(matvec: Callable, X0: jnp.ndarray, k: int,
     on CPU; the TPU path distributes the inner SpMM via grblas.dist).
     """
     n, m = X0.shape
-    X = _ortho(X0.astype(jnp.float64) if X0.dtype == jnp.float64 else X0)
+    X = _ortho(X0)
     P = jnp.zeros_like(X)
     pinv = None
     if precond_diag is not None:

@@ -198,6 +198,7 @@ def backend_fault(backend: str = "sellcs", *, edge_rings_only: bool = True,
     pre-fault snapshot is restored on exit, discarding anything compiled
     while the fault was live."""
     log = log if log is not None else InjectionLog()
+    # pscheck: disable=api-boundary (fault injection swaps a backend's execute hook in place; the public registry API is read-only by design)
     orig = _backends._REGISTRY[backend]
     cache_snapshot = dict(registry._TRACE_CACHE)
     registry._TRACE_CACHE.clear()
@@ -211,11 +212,13 @@ def backend_fault(backend: str = "sellcs", *, edge_rings_only: bool = True,
                 f"(repro.testing.faultinject)")
         return orig.execute(A, X, ring, desc)
 
+    # pscheck: disable=api-boundary (install the faulted hook; restored in the finally below)
     _backends._REGISTRY[backend] = dataclasses.replace(orig,
                                                        execute=execute)
     try:
         yield log
     finally:
+        # pscheck: disable=api-boundary (restore the pre-fault backend record)
         _backends._REGISTRY[backend] = orig
         registry._TRACE_CACHE.clear()
         registry._TRACE_CACHE.update(cache_snapshot)

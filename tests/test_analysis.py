@@ -1,0 +1,646 @@
+"""Self-tests for pscheck (repro.analysis) — DESIGN.md §11.
+
+Every shipped rule gets one *positive* fixture (a minimal snippet that
+violates the invariant and must be flagged) and one *negative* fixture
+(the compliant counterpart that must stay silent).  Contexts are built
+with synthetic ``repro``-relative paths so the scope tables in
+``analysis/profile.py`` apply without touching the real tree; the
+end-to-end channels (suppressions, meta-rules, baseline, fixers, CLI)
+run against real temp files.  The final test pins ``src/repro`` clean
+modulo the committed baseline — the same gate ``make lint`` and CI run.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro import analysis
+from repro.analysis.core import ModuleContext, ProjectContext
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+def _ctx(rel: str, source: str) -> ModuleContext:
+    """A parsed module at a synthetic repro-relative path (never read
+    from disk — source is given)."""
+    return ModuleContext(Path("/fx/repro") / rel,
+                         source=textwrap.dedent(source))
+
+
+def _findings(rule_id: str, *ctxs):
+    rule = analysis.registered_rules()[rule_id]
+    out = []
+    for ctx in ctxs:
+        if rule.check is not None:
+            out.extend(rule.check(ctx))
+    if rule.project_check is not None:
+        out.extend(rule.project_check(ProjectContext(list(ctxs))))
+    return [f for f in out if f.rule == rule_id]
+
+
+def _rules_of(findings):
+    return sorted({f.rule for f in findings})
+
+
+# ------------------------------------------------------------- hot-purity
+
+def test_hot_purity_positive():
+    bad = _ctx("core/solvers/newtonish.py", """
+        import numpy as np
+        import jax, jax.numpy as jnp
+        from scipy.sparse.linalg import eigsh
+
+        @jax.jit
+        def run(x):
+            return jnp.asarray(np.sum(x))
+    """)
+    fs = _findings("hot-purity", bad)
+    msgs = " ".join(f.message for f in fs)
+    assert "scipy import" in msgs          # banned outright in core/solvers/
+    assert "traced scope" in msgs          # np.sum inside the jitted body
+    assert any(f.symbol == "run" for f in fs)
+
+
+def test_hot_purity_negative():
+    # jnp-only solver code, and *host-side* numpy in an unscoped module
+    good = _ctx("core/solvers/ok.py", """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def run(x):
+            return jnp.sum(x * x)
+    """)
+    host = _ctx("serve/queue.py", """
+        import numpy as np
+
+        def enqueue(items):
+            return np.asarray(items)      # host assembly: legitimate
+    """)
+    assert _findings("hot-purity", good, host) == []
+
+
+def test_hot_purity_fixer_rewrites_np_to_jnp(tmp_path):
+    f = tmp_path / "repro" / "core" / "plap.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""
+        import jax.numpy as jnp
+        import numpy as np
+
+        def norm(x):
+            return np.sqrt(np.sum(x * x))
+    """))
+    changed = analysis.apply_fixes([f], rules=["hot-purity"])
+    assert f in changed
+    src = f.read_text()
+    assert "return jnp.sqrt(jnp.sum(x * x))" in src
+
+
+# ----------------------------------------------------------- dense-matmul
+
+def test_dense_matmul_positive():
+    bad = _ctx("multilevel/galerkin.py", """
+        import jax.numpy as jnp
+
+        def coarse(P, A):
+            dense = A.toarray()
+            return P.T @ jnp.einsum('ij,jk->ik', dense, P)
+    """)
+    msgs = " ".join(f.message for f in _findings("dense-matmul", bad))
+    assert "'@'" in msgs and "einsum" in msgs and "toarray" in msgs
+
+
+def test_dense_matmul_negative():
+    # api.mxm routing in multilevel is the contract; '@' outside the
+    # multilevel package (scf's small V.T @ U) is not this rule's scope
+    good = _ctx("multilevel/galerkin.py", """
+        from repro.grblas import api
+
+        def coarse(P, W, desc):
+            WP = api.mxm(W, P.dense, desc=desc)
+            return api.mxm(P.transpose(), WP, desc=desc)
+    """)
+    elsewhere = _ctx("core/solvers/scf.py", """
+        def rayleigh(V, U):
+            return V.T @ U
+    """)
+    assert _findings("dense-matmul", good, elsewhere) == []
+
+
+# -------------------------------------------------------------- host-sync
+
+def test_host_sync_positive():
+    bad = _ctx("serve/lane.py", """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            r = x * 2
+            a = float(r)
+            b = np.asarray(r)
+            c = r.item()
+            return a, b, c
+    """)
+    fs = _findings("host-sync", bad)
+    msgs = " ".join(f.message for f in fs)
+    assert "float() concretizes" in msgs
+    assert "np.asarray" in msgs
+    assert ".item()" in msgs
+
+
+def test_host_sync_negative():
+    good = _ctx("serve/lane.py", """
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def step(x):
+            n = float(x.shape[0])      # static metadata: fine
+            return x * n
+
+        def host_read(res):
+            return float(res.fval)     # outside any trace: fine
+    """)
+    assert _findings("host-sync", good) == []
+
+
+# ---------------------------------------------------------- traced-branch
+
+def test_traced_branch_positive():
+    bad = _ctx("serve/lane.py", """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x):
+            if jnp.sum(x) > 0:
+                x = x + 1
+            return x
+    """)
+    fs = _findings("traced-branch", bad)
+    assert len(fs) == 1 and "lax.cond" in fs[0].message
+
+
+def test_traced_branch_negative():
+    good = _ctx("serve/lane.py", """
+        import jax, jax.numpy as jnp
+
+        @jax.jit
+        def step(x, mode="fast"):
+            if mode == "fast":         # static closure compare: fine
+                return x * 2
+            return x
+
+        def host(x):
+            if jnp.sum(x) > 0:         # eager host code: fine
+                return 1
+            return 0
+    """)
+    assert _findings("traced-branch", good) == []
+
+
+# --------------------------------------------------------- retrace-static
+
+def test_retrace_static_positive():
+    bad = _ctx("core/solvers/driver.py", """
+        import jax
+
+        @jax.jit
+        def step(x, cfg):
+            return x * cfg.scale
+
+        def build(desc):
+            def body(x, desc):
+                return x
+            return jax.jit(body)
+    """)
+    fs = _findings("retrace-static", bad)
+    assert len(fs) == 2
+    assert any("cfg" in f.message for f in fs)
+    assert any("desc" in f.message for f in fs)
+
+
+def test_retrace_static_negative():
+    good = _ctx("core/solvers/driver.py", """
+        import jax
+        from functools import partial
+
+        @partial(jax.jit, static_argnames=("cfg",))
+        def step(x, cfg):
+            return x * cfg.scale
+
+        @jax.jit
+        def plain(x, y):
+            return x + y
+    """)
+    assert _findings("retrace-static", good) == []
+
+
+# -------------------------------------------------------- retrace-loop-jit
+
+def test_retrace_loop_jit_positive():
+    bad = _ctx("serve/engine.py", """
+        import jax
+
+        def sweep(fns, x):
+            out = []
+            for fn in fns:
+                out.append(jax.jit(fn)(x))
+            return out
+    """)
+    fs = _findings("retrace-loop-jit", bad)
+    assert len(fs) == 1 and "memoized" in fs[0].message
+
+
+def test_retrace_loop_jit_negative():
+    good = _ctx("serve/engine.py", """
+        import jax
+        from repro.core.solvers import registry
+
+        def sweep(fn, xs):
+            jfn = jax.jit(fn)                    # hoisted: one trace
+            return [jfn(x) for x in xs]
+
+        def memo_sweep(keys, build):
+            out = []
+            for k in keys:
+                out.append(registry.memoized(k, lambda: jax.jit(build)))
+            return out
+    """)
+    assert _findings("retrace-loop-jit", good) == []
+
+
+# -------------------------------------------------- retrace-mutable-default
+
+def test_retrace_mutable_default_positive():
+    bad = _ctx("serve/engine.py", """
+        import jax
+
+        @jax.jit
+        def step(x, opts={}):
+            return x
+    """)
+    fs = _findings("retrace-mutable-default", bad)
+    assert len(fs) == 1 and "opts={}" in fs[0].message
+
+
+def test_retrace_mutable_default_negative():
+    good = _ctx("serve/engine.py", """
+        import jax
+
+        @jax.jit
+        def step(x, opts=None):
+            return x
+
+        def host_helper(x, acc=[]):    # untraced def: not this rule's job
+            acc.append(x)
+            return acc
+    """)
+    assert _findings("retrace-mutable-default", good) == []
+
+
+def test_retrace_mutable_default_fixer(tmp_path):
+    f = tmp_path / "repro" / "serve" / "engine.py"
+    f.parent.mkdir(parents=True)
+    f.write_text(textwrap.dedent("""
+        import jax
+
+        @jax.jit
+        def step(x, opts={}):
+            \"\"\"Doc.\"\"\"
+            return x
+    """))
+    changed = analysis.apply_fixes([f], rules=["retrace-mutable-default"])
+    assert f in changed
+    src = f.read_text()
+    assert "opts=None" in src
+    assert "if opts is None:" in src
+    # the guard lands after the docstring and the repaired module is clean
+    assert src.index('"""Doc."""') < src.index("if opts is None:")
+    assert _findings("retrace-mutable-default",
+                     ModuleContext(f, source=src)) == []
+
+
+# ------------------------------------------------------------ api-boundary
+
+def test_api_boundary_positive():
+    bad = _ctx("core/aggregate.py", """
+        import jax
+        from repro.kernels.sellcs_spmm.ref import sellcs_spmm_ref
+        from repro.grblas import backends as _backends
+
+        def fold(x, ids):
+            orig = _backends._REGISTRY["coo"]
+            return jax.ops.segment_sum(x, ids), orig
+    """)
+    fs = _findings("api-boundary", bad)
+    msgs = " ".join(f.message for f in fs)
+    assert "segment_sum" in msgs
+    assert "sparse kernel" in msgs
+    assert "private registry" in msgs
+
+
+def test_api_boundary_negative():
+    # the same shapes inside grblas/ are the implementation itself
+    good = _ctx("grblas/api.py", """
+        import jax
+        from repro.kernels.sellcs_spmm.ref import sellcs_spmm_ref
+        from repro.grblas import backends as _backends
+
+        def execute(x, ids):
+            _ = _backends._REGISTRY
+            return jax.ops.segment_sum(x, ids)
+    """)
+    assert _findings("api-boundary", good) == []
+
+
+# ---------------------------------------------------------------- pad-fold
+
+def test_pad_fold_positive():
+    bad = _ctx("grblas/semiring.py", """
+        import jax.numpy as jnp
+
+        def fold_rows(padded_vals):
+            return jnp.sum(padded_vals, axis=1)
+    """)
+    fs = _findings("pad-fold", bad)
+    assert len(fs) == 1 and "pad slots" in fs[0].message
+
+
+def test_pad_fold_negative_masked_and_registered():
+    good = _ctx("grblas/semiring.py", """
+        import jax.numpy as jnp
+
+        def fold_rows(vals, cols, n):
+            valid = jnp.where(cols < n, vals, 0.0)
+            return jnp.sum(valid, axis=1)
+
+        register_ring_fast_paths(
+            "plus_times",
+            padded=lambda vals: jnp.sum(vals, axis=1),
+        )
+    """)
+    assert _findings("pad-fold", good) == []
+
+
+def test_pad_fold_negative_capability_gated_kernel():
+    # a kernel entry point imported by grblas/backends.py runs only
+    # behind a supports gate — its internal folds are claimed
+    backends = _ctx("grblas/backends.py", """
+        from repro.kernels.sellcs_spmm import sellcs_spmm_ref
+    """)
+    kernel = _ctx("kernels/sellcs_spmm/ref.py", """
+        import jax.numpy as jnp
+
+        def sellcs_spmm_ref(vals, gathered):
+            return _fold(vals * gathered)
+
+        def _fold(contrib):
+            return jnp.sum(contrib, axis=1)
+    """)
+    assert _findings("pad-fold", backends, kernel) == []
+
+
+# ------------------------------------------------------------ dtype-hygiene
+
+def test_dtype_hygiene_positive():
+    bad = _ctx("core/phi.py", """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def widen(x, n):
+            a = jnp.zeros(n, dtype=jnp.float64)
+            b = jnp.asarray(x, np.int64)
+            return a, b
+    """)
+    builder = _ctx("grblas/containers.py", """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def _build_ell(self, cols):
+            self.ell_cols = jnp.asarray(cols)     # unpinned boundary
+    """)
+    fs = _findings("dtype-hygiene", bad, builder)
+    msgs = " ".join(f.message for f in fs)
+    assert "jnp.float64" in msgs
+    assert "np.int64" in msgs
+    assert "layout builder" in msgs
+
+
+def test_dtype_hygiene_negative():
+    # host-side 64-bit staging is the intended architecture: numpy fold
+    # keys etc. are pinned down to 32-bit at the jnp boundary
+    host = _ctx("multilevel/coarsen.py", """
+        import numpy as np
+
+        def match(rows, cols):
+            key = rows.astype(np.int64) * (1 << 32) + cols
+            return np.unique(key)
+    """)
+    builder = _ctx("grblas/containers.py", """
+        import numpy as np
+        import jax.numpy as jnp
+
+        def _build_ell(self, n, w, dtype):
+            cols = np.empty((n, w), np.int32)
+            vals = np.zeros((n, w), np.dtype(dtype))
+            self.ell_cols = jnp.asarray(cols)     # host array already pinned
+            self.ell_vals = jnp.asarray(vals)
+    """)
+    assert _findings("dtype-hygiene", host, builder) == []
+
+
+# ------------------------------------------------------------ registry-span
+
+def test_registry_span_positive():
+    backends = _ctx("grblas/backends.py", """
+        @register_backend("coo", cpu_priority=10)
+        def _coo():
+            pass
+    """)
+    fs = _findings("registry-span", backends)
+    assert len(fs) == 1 and "'coo'" in fs[0].message
+
+
+def test_registry_span_negative_dynamic_chokepoint():
+    backends = _ctx("grblas/backends.py", """
+        @register_backend("coo", cpu_priority=10)
+        def _coo():
+            pass
+
+        @register_backend("ell", cpu_priority=20)
+        def _ell():
+            pass
+    """)
+    api = _ctx("grblas/api.py", """
+        def mxm(A, X, be, tele):
+            with tele.span("grblas.mxm", backend=be.name):
+                return be.execute(A, X)
+    """)
+    assert _findings("registry-span", backends, api) == []
+
+
+def test_registry_span_guards_registry_relocation():
+    # backends.py with zero register_backend calls: the rule proves
+    # nothing and says so rather than passing vacuously
+    moved = _ctx("grblas/backends.py", """
+        def nothing_here():
+            pass
+    """)
+    fs = _findings("registry-span", moved)
+    assert len(fs) == 1 and "registry moved" in fs[0].message
+
+
+# -------------------------------------------- suppressions and meta-rules
+
+def _write_module(tmp_path, rel, source):
+    f = tmp_path / "repro" / rel
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return f
+
+
+def test_suppression_with_reason_silences(tmp_path):
+    f = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            # pscheck: disable=dense-matmul (3x3 diagnostic block, not a coarse operator)
+            return A @ B
+    """)
+    assert analysis.run([f], rules=["dense-matmul"]) == []
+
+
+def test_suppression_same_line_form(tmp_path):
+    f = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            return A @ B  # pscheck: disable=dense-matmul (tiny diagnostic)
+    """)
+    assert analysis.run([f], rules=["dense-matmul"]) == []
+
+
+def test_suppression_without_reason_is_flagged(tmp_path):
+    f = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            return A @ B  # pscheck: disable=dense-matmul
+    """)
+    rules = _rules_of(analysis.run([f], rules=["dense-matmul"]))
+    assert rules == ["suppression-reason"]
+
+
+def test_unused_suppression_is_flagged(tmp_path):
+    f = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            # pscheck: disable=dense-matmul (left over after the fix)
+            return A + B
+    """)
+    fs = analysis.run([f], rules=["dense-matmul"])
+    assert _rules_of(fs) == ["unused-suppression"]
+    assert "delete the directive" in fs[0].message
+
+
+def test_parse_error_is_a_finding(tmp_path):
+    f = _write_module(tmp_path, "multilevel/broken.py", """
+        def probe(A, B:
+            return A
+    """)
+    fs = analysis.run([f])
+    assert _rules_of(fs) == ["parse-error"]
+
+
+# ----------------------------------------------------------------- baseline
+
+def _mk_finding(**kw):
+    base = dict(rule="dense-matmul", path="multilevel/x.py", line=3, col=4,
+                message="dense '@' product", symbol="probe")
+    base.update(kw)
+    return analysis.Finding(**base)
+
+
+def test_baseline_round_trip_and_split(tmp_path):
+    bl = tmp_path / "baseline.json"
+    known = _mk_finding()
+    analysis.write_baseline([known], bl)
+    data = json.loads(bl.read_text())
+    assert data["version"] == 1 and len(data["entries"]) == 1
+    # key is (rule, path, symbol, message) — line moves are invisible
+    moved = _mk_finding(line=99)
+    fresh = _mk_finding(path="multilevel/y.py")
+    new, stale = analysis.apply_baseline([moved, fresh],
+                                         analysis.load_baseline(bl))
+    assert new == [fresh] and stale == []
+
+
+def test_baseline_is_shrink_only(tmp_path):
+    bl = tmp_path / "baseline.json"
+    analysis.write_baseline([_mk_finding()], bl)
+    # the violation is gone but the ledger entry remains: stale -> error
+    new, stale = analysis.apply_baseline([], analysis.load_baseline(bl))
+    assert new == [] and len(stale) == 1
+    with pytest.raises(AssertionError, match="shrink the ledger"):
+        analysis.assert_clean([], baseline=bl)
+
+
+def test_assert_clean_reports_findings(tmp_path):
+    f = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            return A @ B
+    """)
+    with pytest.raises(AssertionError, match="dense-matmul"):
+        analysis.assert_clean([f], rules=["dense-matmul"])
+
+
+# ---------------------------------------------------------------------- CLI
+
+def _cli(*args, cwd=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.analysis", *args],
+        capture_output=True, text=True, env=env, cwd=cwd or REPO)
+
+
+def test_cli_list_rules():
+    res = _cli("--list-rules")
+    assert res.returncode == 0
+    for rid in ("hot-purity", "host-sync", "retrace-static", "api-boundary",
+                "pad-fold", "dtype-hygiene", "registry-span"):
+        assert rid in res.stdout
+
+
+def test_cli_exit_codes_and_json(tmp_path):
+    bad = _write_module(tmp_path, "multilevel/probe.py", """
+        def probe(A, B):
+            return A @ B
+    """)
+    res = _cli(str(bad), "--rules", "dense-matmul", "--json")
+    assert res.returncode == 1
+    payload = json.loads(res.stdout)
+    assert payload["findings"][0]["rule"] == "dense-matmul"
+    good = _write_module(tmp_path, "multilevel/ok.py", """
+        def probe(A, B):
+            return A
+    """)
+    assert _cli(str(good)).returncode == 0
+
+
+# -------------------------------------------------------------- repo gate
+
+def test_every_rule_has_invariant_and_fixture_coverage():
+    """Structural pin: each registered rule documents its invariant, and
+    this module carries a positive + negative fixture for it (grep our
+    own test names — adding a rule without fixtures fails here)."""
+    here = Path(__file__).read_text()
+    for rid, rule in analysis.registered_rules().items():
+        assert rule.invariant and rule.summary, rid
+        slug = rid.replace("-", "_")
+        assert f"test_{slug}_positive" in here or f"_{slug}_" in here, (
+            f"rule {rid} has no fixture tests in tests/test_analysis.py")
+
+
+def test_src_repro_is_clean_modulo_baseline():
+    """The make-lint/CI gate, as a tier-1 test: zero unbaselined pscheck
+    findings in src/repro and zero stale ledger entries."""
+    analysis.assert_clean([REPO / "src" / "repro"],
+                          baseline=REPO / "pscheck_baseline.json")

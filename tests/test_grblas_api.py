@@ -341,10 +341,13 @@ def test_dist_rejects_pad_unsound_edge_rings():
 
 def test_plap_hot_path_has_no_raw_segment_sum():
     """Acceptance pin: core/plap.py routes every SpMM-shaped reduction
-    through grblas.api — no direct jax.ops.segment_sum in the hot path."""
-    import inspect
+    through grblas.api — no direct jax.ops.segment_sum in the hot path.
+    Enforced by the pscheck api-boundary rule (repro.analysis)."""
+    from pathlib import Path
+
+    from repro import analysis
     from repro.core import plap
 
-    src = inspect.getsource(plap)
-    assert "segment_sum(" not in src     # no calls (docstring may cite it)
-    assert "api.mxm" in src
+    analysis.assert_clean([Path(plap.__file__)],
+                          rules=["api-boundary", "hot-purity"])
+    assert "api.mxm" in Path(plap.__file__).read_text()

@@ -50,18 +50,15 @@ def _rand_sym(n, density, seed, weighted=True):
 
 def test_no_scipy_or_np_matmul_in_multilevel_sources():
     """The acceptance contract: coarse operators are built exclusively
-    through grblas.api.mxm — no scipy and no numpy matrix products
-    anywhere in repro/multilevel/."""
+    through grblas.api.mxm — no scipy and no dense matrix products
+    anywhere in repro/multilevel/.  Enforced by the pscheck hot-purity /
+    dense-matmul rules (repro.analysis, DESIGN.md §11)."""
+    from repro import analysis
+
     pkg = Path(__file__).resolve().parent.parent / "src/repro/multilevel"
-    forbidden = ("scipy", "np.matmul", "np.dot", "np.einsum", "jnp.matmul",
-                 "jnp.einsum", ".toarray", "np.tensordot", " @ ")
-    for f in sorted(pkg.glob("*.py")):
-        src = f.read_text()
-        for tok in forbidden:
-            assert tok not in src, f"{f.name} contains forbidden {tok!r}"
-        # the triple product must actually route through the api
-        if f.name == "coarsen.py":
-            assert "api.mxm" in src
+    analysis.assert_clean([pkg], rules=["hot-purity", "dense-matmul"])
+    # the triple product must actually route through the api
+    assert "api.mxm" in (pkg / "coarsen.py").read_text()
 
 
 # ------------------------------------------------------ matching + P shape

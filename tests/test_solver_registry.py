@@ -250,15 +250,13 @@ def test_property_drivers_agree_on_planted_blobs(seed):
 
 def test_no_scipy_or_raw_segment_sum_in_drivers():
     """Every driver consumes the unified api.mxm rings: no scipy and no
-    raw segment_sum anywhere in core/solvers/ (mirrors the multilevel
-    no-scipy scan)."""
+    raw segment_sum anywhere in core/solvers/ — enforced by the pscheck
+    hot-purity / api-boundary rules (repro.analysis, DESIGN.md §11)."""
+    from repro import analysis
+
     pkg = Path(__file__).resolve().parent.parent / "src/repro/core/solvers"
-    files = sorted(pkg.glob("*.py"))
-    assert len(files) >= 5              # __init__, registry, 3 drivers
-    for f in files:
-        src = f.read_text()
-        for tok in ("scipy", "segment_sum"):
-            assert tok not in src, f"{f.name} contains forbidden {tok!r}"
+    assert len(sorted(pkg.glob("*.py"))) >= 5   # __init__, registry, 3 drivers
+    analysis.assert_clean([pkg], rules=["hot-purity", "api-boundary"])
     # the drivers reach the algebra through the plap/lobpcg layers (which
     # route api.mxm), never a private reduction
     assert "plap" in (pkg / "newton.py").read_text()
